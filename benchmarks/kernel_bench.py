@@ -1,0 +1,71 @@
+"""Kernel micro-bench: wall time of the interpret-mode kernels vs their
+jnp oracles on small shapes. Interpret-mode timings are NOT TPU
+performance (the kernel body runs as python/XLA ops); the derived column
+reports the analytic HBM bytes each kernel moves on TPU — the quantity
+the roofline model uses.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, n=3):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit):
+    key = jax.random.key(0)
+    B, S, H, KV, dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.bfloat16)
+    flash_bytes = 2 * (q.size + 2 * k.size + q.size)  # q,k,v,o one pass
+    emit("kernel/flash_attention/interp",
+         _t(lambda: ops.flash_attention(q, k, v, interpret=True)),
+         f"tpu_hbm_bytes={flash_bytes}")
+    emit("kernel/flash_attention/ref",
+         _t(lambda: ref.flash_attention(q, k, v)),
+         f"xla_extra_bytes~={4 * B * H * S * S}")
+
+    L = 2048
+    qd = jax.random.normal(ks[0], (B, H, dh), jnp.bfloat16)
+    kd = jax.random.normal(ks[1], (B, L, KV, dh), jnp.bfloat16)
+    vd = jax.random.normal(ks[2], (B, L, KV, dh), jnp.bfloat16)
+    valid = jnp.ones((B, L), bool)
+    emit("kernel/decode_attention/interp",
+         _t(lambda: ops.decode_attention(qd, kd, vd, valid, interpret=True)),
+         f"tpu_hbm_bytes={2 * 2 * kd.size}")
+
+    W = 256
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.9, 0.999)
+    x = jax.random.normal(ks[1], (B, S, W), jnp.float32)
+    h0 = jnp.zeros((B, W), jnp.float32)
+    emit("kernel/rglru_scan/interp",
+         _t(lambda: ops.rglru_scan(a, x, h0, interpret=True)),
+         f"tpu_hbm_bytes={4 * 3 * a.size}")
+
+    Di, N = 256, 16
+    u = jax.random.normal(ks[0], (B, S, Di), jnp.float32)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.5)
+    Bc = jax.random.normal(ks[0], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[1], (B, S, N), jnp.float32)
+    D = jnp.ones((Di,), jnp.float32)
+    hs = jnp.zeros((B, Di, N), jnp.float32)
+    # XLA associative scan materializes [B,S,Di,N] fp32 twice; kernel never.
+    emit("kernel/ssm_scan/interp",
+         _t(lambda: ops.ssm_scan(u, delta, A, Bc, Cc, D, hs, interpret=True)),
+         f"xla_extra_bytes~={2 * 4 * B * S * Di * N}")

@@ -1,0 +1,54 @@
+"""Paper Figure 2: parameter-server QPS vs #requesters for the three
+topologies (single / replicated / cached). Uses the example's services on
+the thread launcher with real gRPC channels optional.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+import threading
+import time
+
+from repro import core as lp
+
+
+def _load_example():
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "parameter_server.py")
+    spec = importlib.util.spec_from_file_location("ps_example",
+                                                  os.path.abspath(path))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def measure(mode: str, num_requesters: int, seconds: float = 1.0) -> float:
+    ex = _load_example()
+    qps_out = {}
+
+    class Meter(ex.Meter):
+        def run(self):
+            time.sleep(self._seconds)
+            with self._lock:
+                qps_out["qps"] = self._n / self._seconds
+            lp.stop_program()
+
+    ex.Meter = Meter
+    program = ex.build(mode, num_requesters, seconds)
+    lp.launch_and_wait(program, timeout_s=seconds + 60)
+    return qps_out["qps"]
+
+
+def run(emit):
+    """emit(name, us_per_call, derived)"""
+    base = None
+    for mode in ("single", "replicated", "cached"):
+        for n in (1, 4, 8):
+            qps = measure(mode, n, seconds=1.0)
+            if base is None:
+                base = qps
+            emit(f"param_server/{mode}/n{n}",
+                 1e6 / max(qps, 1e-9),
+                 f"qps={qps:.0f};rel={qps / base:.2f}")

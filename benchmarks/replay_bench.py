@@ -1,0 +1,34 @@
+"""Reverb-lite throughput: insert and sample rates, with/without the
+samples-per-insert rate limiter."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.replay import ReplayServer, TableConfig
+
+
+def run(emit):
+    item = {"obs": np.zeros((16, 8), np.float32)}
+    for spi in (None, 4.0):
+        rs = ReplayServer([TableConfig("t", max_size=10_000,
+                                       samples_per_insert=spi,
+                                       min_size_to_sample=1)])
+        n = 2000
+        t0 = time.perf_counter()
+        for i in range(n):
+            rs.insert("t", item, timeout=1.0)
+            if spi is not None and i % 2 == 0:
+                rs.sample("t", int(spi) * 2, timeout=1.0)
+        dt = (time.perf_counter() - t0) / n * 1e6
+        emit(f"replay/insert/spi={spi}", dt, f"size={rs.size('t')}")
+
+        # Stay within the SPI budget — sampling past it correctly blocks.
+        m = 500 if spi is None else max(1, int(spi * n / 32) - n // 2)
+        t0 = time.perf_counter()
+        for _ in range(m):
+            rs.sample("t", 32, timeout=1.0)
+        dt = (time.perf_counter() - t0) / m * 1e6
+        emit(f"replay/sample32/spi={spi}", dt, f"n={m}")

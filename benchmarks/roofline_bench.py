@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/single/*.json; emits one row per runnable cell with
+the three terms and the bound. Derived column packs the full detail.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun",
+                   "single")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(emit):
+    recs = rows()
+    if not recs:
+        emit("roofline/NO_ARTIFACTS", 0.0,
+             "run: python -m repro.launch.dryrun --mesh single")
+        return
+    for d in recs:
+        name = f"roofline/{d['arch']}/{d['shape']}"
+        if d["status"] == "skipped":
+            emit(name, 0.0, f"skipped:{d['reason'][:40]}")
+            continue
+        if d["status"] != "ok" or "roofline" not in d:
+            emit(name, 0.0, f"status={d['status']}")
+            continue
+        r = d["roofline"]
+        emit(name, r["step_s"] * 1e6,
+             f"bound={r['bound']};ct={r['compute_s']:.4f}s;"
+             f"mt={r['memory_s']:.4f}s;colt={r['collective_s']:.4f}s;"
+             f"mfu={r['mfu']:.4f};useful={r['useful_flops_ratio']:.2f};"
+             f"peak={d['memory']['peak_estimate_gb']:.1f}GB")

@@ -1,0 +1,52 @@
+"""Paper §1 claim: "Launchpad adds no additional overhead — communication
+between individual services will be just as fast as the underlying
+communication protocol." Measured: direct python call vs in-process
+courier channel vs courier-over-gRPC, same payloads.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import courier
+from repro.core.courier.server import CourierServer
+
+
+class Echo:
+    def ping(self):
+        return 1
+
+    def echo(self, x):
+        return x
+
+
+def _time_call(fn, n: int) -> float:
+    fn()  # warmup
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run(emit):
+    obj = Echo()
+    payload = np.zeros(64 * 1024, np.uint8)   # 64 KiB
+    n = 300
+
+    emit("rpc/direct/ping", _time_call(obj.ping, n), "baseline")
+    emit("rpc/direct/echo64k", _time_call(lambda: obj.echo(payload), n), "")
+
+    courier.inprocess.register("echo_bench", obj)
+    cli = courier.client_for("inproc://echo_bench")
+    emit("rpc/inproc/ping", _time_call(cli.ping, n), "shared-memory channel")
+    emit("rpc/inproc/echo64k", _time_call(lambda: cli.echo(payload), n), "")
+    courier.inprocess.unregister("echo_bench")
+
+    srv = CourierServer(obj)
+    srv.start()
+    g = courier.client_for(srv.endpoint)
+    emit("rpc/grpc/ping", _time_call(g.ping, n), "courier-over-grpc")
+    emit("rpc/grpc/echo64k", _time_call(lambda: g.echo(payload), n), "")
+    srv.stop()

@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure + system substrate.
+
+    PYTHONPATH=src python -m benchmarks.run [--only param_server,...]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+  * param_server  — paper Figure 2 (QPS: single vs replicated vs cached)
+  * rpc_overhead  — paper §1 zero-overhead claim (direct vs inproc vs gRPC)
+  * replay        — reverb-lite insert/sample throughput + rate limiter
+  * kernels       — Pallas kernels (interpret) vs oracles + analytic bytes
+  * roofline      — per-cell roofline terms from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+SUITES = ("rpc_overhead", "replay", "kernels", "param_server", "roofline")
+
+
+def _emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    print("name,us_per_call,derived")
+    if "rpc_overhead" in only:
+        from benchmarks import rpc_overhead
+        rpc_overhead.run(_emit)
+    if "replay" in only:
+        from benchmarks import replay_bench
+        replay_bench.run(_emit)
+    if "kernels" in only:
+        from benchmarks import kernel_bench
+        kernel_bench.run(_emit)
+    if "param_server" in only:
+        from benchmarks import param_server
+        param_server.run(_emit)
+    if "roofline" in only:
+        from benchmarks import roofline_bench
+        roofline_bench.run(_emit)
+
+
+if __name__ == "__main__":
+    main()

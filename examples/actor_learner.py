@@ -1,0 +1,158 @@
+"""Distributed actor–learner RL (paper §5.4, Listings 7/11).
+
+Actors interact with a toy environment and push trajectories into a
+ReverbNode table (rate-limited, paper §4.2 "data services"); a Learner
+samples batches, runs a JAX policy-gradient step, and serves parameters
+back to the actors — the exact topology of the paper with our replay
+substrate underneath.
+
+Environment: 1-D "target chase" — state is (pos, target); reward is
+-|pos-target|; actions move ±1/0. Learnable in a few hundred steps.
+
+    PYTHONPATH=src python examples/actor_learner.py --steps 150
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as lp
+from repro.data.replay import TableConfig
+
+GRID = 8
+ACTIONS = 3  # left, stay, right
+
+
+class ChaseEnv:
+    def __init__(self, seed):
+        self._rng = np.random.default_rng(seed)
+        self.reset()
+
+    def reset(self):
+        self._pos = int(self._rng.integers(0, GRID))
+        self._target = int(self._rng.integers(0, GRID))
+        return self._obs()
+
+    def _obs(self):
+        return np.array([self._pos, self._target], np.float32) / GRID
+
+    def step(self, action):
+        self._pos = int(np.clip(self._pos + (action - 1), 0, GRID - 1))
+        reward = -abs(self._pos - self._target) / GRID
+        return self._obs(), reward
+
+
+def policy_logits(params, obs):
+    h = jnp.tanh(obs @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+class Actor:
+    def __init__(self, learner, replay, seed, episode_len=16):
+        self._learner = learner
+        self._replay = replay
+        self._env = ChaseEnv(seed)
+        self._rng = np.random.default_rng(seed + 1)
+        self._episode_len = episode_len
+
+    def run(self):
+        ctx = lp.get_current_context()
+        params = self._learner.get_params()
+        while not ctx.should_stop:
+            obs = self._env.reset()
+            traj_obs, traj_act, traj_rew = [], [], []
+            for _ in range(self._episode_len):
+                logits = np.asarray(policy_logits(
+                    jax.tree.map(jnp.asarray, params), jnp.asarray(obs)))
+                probs = np.exp(logits - logits.max())
+                probs /= probs.sum()
+                action = int(self._rng.choice(ACTIONS, p=probs))
+                traj_obs.append(obs)
+                traj_act.append(action)
+                obs, reward = self._env.step(action)
+                traj_rew.append(reward)
+            ok = self._replay.insert("trajectories", {
+                "obs": np.stack(traj_obs), "act": np.array(traj_act),
+                "rew": np.array(traj_rew, np.float32)}, timeout=5.0)
+            if ok:
+                params = self._learner.get_params()  # periodic param fetch
+
+
+class Learner:
+    def __init__(self, replay, steps=150, batch_size=8, lr=0.05):
+        self._replay = replay
+        self._steps = steps
+        self._batch = batch_size
+        key = jax.random.key(0)
+        k1, k2 = jax.random.split(key)
+        self._params = {
+            "w1": jax.random.normal(k1, (2, 32)) * 0.5,
+            "b1": jnp.zeros((32,)),
+            "w2": jax.random.normal(k2, (32, ACTIONS)) * 0.5,
+            "b2": jnp.zeros((ACTIONS,)),
+        }
+        self._lr = lr
+        self._update = jax.jit(self._pg_step)
+
+    def _pg_step(self, params, obs, act, ret):
+        def loss_fn(p):
+            logits = policy_logits(p, obs)          # [B, T, A]
+            logp = jax.nn.log_softmax(logits)
+            chosen = jnp.take_along_axis(logp, act[..., None], -1)[..., 0]
+            adv = ret - ret.mean()
+            return -(chosen * adv).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, g: p - self._lr * g, params, grads)
+        return params, loss
+
+    def get_params(self):
+        return jax.tree.map(np.asarray, self._params)
+
+    def run(self):
+        returns = []
+        for step in range(self._steps):
+            batch = self._replay.sample("trajectories", self._batch,
+                                        timeout=30.0)
+            if batch is None:
+                print("learner: replay timed out")
+                break
+            obs = jnp.asarray(np.stack([b["obs"] for b in batch]))
+            act = jnp.asarray(np.stack([b["act"] for b in batch]))
+            rew = np.stack([b["rew"] for b in batch])
+            ret = jnp.asarray((rew[..., ::-1].cumsum(-1)[..., ::-1]).copy())
+            self._params, loss = self._update(self._params, obs, act, ret)
+            returns.append(float(rew.sum(-1).mean()))
+            if step % 25 == 0 or step == self._steps - 1:
+                print(f"step {step:4d} loss={float(loss):7.4f} "
+                      f"mean_episode_return={np.mean(returns[-25:]):7.3f}")
+        early = np.mean(returns[:20])
+        late = np.mean(returns[-20:])
+        print(f"return improved {early:.3f} -> {late:.3f}")
+        lp.stop_program()
+
+
+def build(num_actors=4, steps=150) -> lp.Program:
+    p = lp.Program("actor-learner")
+    replay = p.add_node(lp.ReverbNode([TableConfig(
+        "trajectories", max_size=2000, sampler="uniform",
+        min_size_to_sample=8)]))
+    with p.group("learner"):
+        learner = p.add_node(lp.CourierNode(Learner, replay, steps=steps))
+    with p.group("actor"):
+        for i in range(num_actors):
+            p.add_node(lp.CourierNode(Actor, learner, replay, seed=i))
+    return p
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--actors", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+    lp.launch_and_wait(build(args.actors, args.steps), timeout_s=600)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Parameter server (paper §5.1, Listings 3/4, Figure 2).
+
+Three topologies over the same services, selected by --mode:
+  single      one server, N requesters (Listing 3)
+  replicated  servers replicated, requesters partitioned (Listing 4 left)
+  cached      one server behind a CacherNode (Listing 4 right)
+
+    PYTHONPATH=src python examples/parameter_server.py --mode cached \
+        --requesters 8 --seconds 2
+"""
+
+import argparse
+import random
+import threading
+import time
+
+from repro import core as lp
+
+
+class ParamServer:
+    def get_value(self):
+        time.sleep(0.001)   # paper: 1ms simulated parameter-fetch delay
+        return random.random()
+
+
+class Requester:
+    """Polls the server as fast as it can; reports its QPS to a meter."""
+
+    def __init__(self, param_server, meter):
+        self._server = param_server
+        self._meter = meter
+
+    def run(self):
+        ctx = lp.get_current_context()
+        n = 0
+        while not ctx.should_stop:
+            self._server.get_value()
+            n += 1
+            self._meter.count(1)
+        del n
+
+
+class Meter:
+    def __init__(self, seconds: float):
+        self._n = 0
+        self._lock = threading.Lock()
+        self._seconds = seconds
+
+    def count(self, k: int):
+        with self._lock:
+            self._n += k
+
+    def run(self):
+        time.sleep(self._seconds)
+        with self._lock:
+            qps = self._n / self._seconds
+        print(f"total QPS: {qps:,.0f}")
+        lp.stop_program()
+
+
+def build(mode: str, num_requesters: int, seconds: float,
+          num_servers: int = 4, cache_timeout: float = 0.01) -> lp.Program:
+    p = lp.Program(f"ps-{mode}")
+    meter = p.add_node(lp.CourierNode(Meter, seconds))
+
+    if mode == "single":
+        with p.group("server"):
+            server = p.add_node(lp.CourierNode(ParamServer))
+        targets = [server] * num_requesters
+    elif mode == "replicated":
+        with p.group("server"):
+            servers = [p.add_node(lp.CourierNode(ParamServer))
+                       for _ in range(num_servers)]
+        targets = [servers[i % num_servers] for i in range(num_requesters)]
+    elif mode == "cached":
+        with p.group("server"):
+            server = p.add_node(lp.CourierNode(ParamServer))
+        with p.group("cacher"):
+            cacher = p.add_node(lp.CacherNode(server, timeout_s=cache_timeout))
+        targets = [cacher] * num_requesters
+    else:
+        raise ValueError(mode)
+
+    with p.group("requester"):
+        for t in targets:
+            p.add_node(lp.CourierNode(Requester, t, meter))
+    return p
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="cached",
+                    choices=["single", "replicated", "cached"])
+    ap.add_argument("--requesters", type=int, default=8)
+    ap.add_argument("--seconds", type=float, default=2.0)
+    args = ap.parse_args()
+    program = build(args.mode, args.requesters, args.seconds)
+    print(program)
+    lp.launch_and_wait(program, timeout_s=args.seconds + 30)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Batched-serving driver (thin wrapper over repro.launch.serve):
+clients -> batcher -> SPMD model server, with latency percentiles.
+
+    PYTHONPATH=src python examples/serve_lm.py --clients 3 --requests 4
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""End-to-end LM training driver (thin wrapper over repro.launch.train).
+
+Default: a tiny LM for 200 steps on CPU in a few minutes. The same program
+scales: ``--preset lm100m`` is the ~100M-parameter configuration, and any
+assigned architecture runs via ``--arch <id> --reduced``.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset lm100m --steps 300
+"""
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from artifacts."""
+import json, glob, os, sys
+
+def load(mesh):
+    rows = {}
+    for f in glob.glob(f"artifacts/dryrun/{mesh}/*.json"):
+        d = json.load(open(f))
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+single, multi = load("single"), load("multi")
+shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+archs = sorted({a for a, _ in single})
+
+print("### Dry-run matrix (status single-pod 16x16 / multi-pod 2x16x16, per-chip peak GB)\n")
+print("| arch | " + " | ".join(shapes) + " |")
+print("|---|" + "---|" * len(shapes))
+for a in archs:
+    cells = []
+    for s in shapes:
+        d1, d2 = single.get((a, s)), multi.get((a, s))
+        if d1 is None:
+            cells.append("—"); continue
+        if d1["status"] == "skipped":
+            cells.append("skip"); continue
+        p1 = d1["memory"]["peak_estimate_gb"]
+        p2 = d2["memory"]["peak_estimate_gb"] if d2 and d2["status"] == "ok" else None
+        c = f"ok {p1:.1f}G / " + (f"ok {p2:.1f}G" if p2 is not None else d2["status"] if d2 else "—")
+        cells.append(c)
+    print(f"| {a} | " + " | ".join(cells) + " |")
+
+print("\n### Roofline (single-pod, per-chip; seconds per step)\n")
+print("| arch | shape | bound | compute_s | memory_s | collective_s | MFU | useful | collectives (AG/AR/RS/A2A/CP) |")
+print("|---|---|---|---|---|---|---|---|---|")
+for a in archs:
+    for s in shapes:
+        d = single.get((a, s))
+        if not d or d["status"] != "ok" or "roofline" not in d:
+            continue
+        r = d["roofline"]; c = d["cost"]["collective_counts"]
+        cc = "/".join(str(int(c.get(k, 0))) for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        print(f"| {a} | {s} | {r['bound']} | {r['compute_s']:.3f} | "
+              f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+              f"{r['mfu']:.3f} | {r['useful_flops_ratio']:.2f} | {cc} |")
+
+skips = [(a, s, single[(a, s)]["reason"]) for a in archs for s in shapes
+         if (a, s) in single and single[(a, s)]["status"] == "skipped"]
+print("\n### Skipped cells\n")
+for a, s, r in skips:
+    print(f"* `{a} × {s}` — {r}")

@@ -1,0 +1,42 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+import re, dataclasses, collections
+from repro import configs
+from repro.launch import cells as cells_lib
+from repro.models import transformer, scan_utils, attention, ssm
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import _SHAPE_RE, _DTYPE_BYTES
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+if len(sys.argv) > 3 and sys.argv[3] == "bf16":
+    ssm.SCAN_DTYPE = "bfloat16"
+cfg = configs.get(arch)
+shape = cells_lib.SHAPES[shape_name]
+mesh = make_production_mesh()
+plan = cells_lib.plan_cell(cfg, shape, mesh)
+plan = dataclasses.replace(plan, unroll_micro=True)
+transformer.SCAN_UNROLL_THRESHOLD = 4
+scan_utils.FORCE_SINGLE_CHUNK = True
+attention.CHUNK_MODE = "unrolled"
+pcfg = dataclasses.replace(cfg, num_layers=len(cfg.pattern))
+cell = cells_lib.build_cell(pcfg, shape, mesh, plan=plan)
+compiled = cells_lib.lower_cell(cell, mesh).compile()
+ca = compiled.cost_analysis()
+print("total bytes accessed:", f"{ca.get('bytes accessed'):.3e}", "flops:", f"{ca.get('flops'):.3e}")
+# rank ops by result bytes (per occurrence), grouped by opcode+shape
+buckets = collections.Counter()
+op_re = re.compile(r"=\s*(\(?[a-z0-9_]+\[[0-9,]*\][^)=]*?\)?)\s+([a-z][a-z0-9_-]*)\(")
+for line in compiled.as_text().splitlines():
+    m = op_re.search(line)
+    if not m: continue
+    shapes_str, op = m.group(1), m.group(2)
+    size = 0
+    for dtype, dims in _SHAPE_RE.findall(shapes_str):
+        if dtype not in _DTYPE_BYTES: continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip(): n *= int(d)
+        size += n * _DTYPE_BYTES[dtype]
+    buckets[(op, shapes_str[:48])] += size
+for (op, shp), b in buckets.most_common(12):
+    print(f"{b:.3e} {op:22s} {shp}")

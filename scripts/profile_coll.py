@@ -1,0 +1,42 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+import re, dataclasses, collections
+from repro import configs
+from repro.launch import cells as cells_lib, dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer, scan_utils, attention
+from repro.roofline import analysis
+
+arch, shape_name, nm = sys.argv[1], sys.argv[2], int(sys.argv[3])
+cfg = configs.get(arch)
+shape = cells_lib.SHAPES[shape_name]
+mesh = make_production_mesh()
+plan = cells_lib.plan_cell(cfg, shape, mesh)
+plan = dataclasses.replace(plan, num_microbatches=nm, unroll_micro=True)
+
+transformer.SCAN_UNROLL_THRESHOLD = 4
+scan_utils.FORCE_SINGLE_CHUNK = True
+attention.CHUNK_MODE = "unrolled"
+pcfg = dataclasses.replace(cfg, num_layers=2*len(cfg.pattern))
+cell = cells_lib.build_cell(pcfg, shape, mesh, plan=plan)
+compiled = cells_lib.lower_cell(cell, mesh).compile()
+txt = compiled.as_text()
+
+# rank collectives by wire bytes, keyed by (kind, shape)
+buckets = collections.Counter()
+for line in txt.splitlines():
+    m = analysis._INSTR_RE.search(line)
+    if not m: continue
+    shapes_str, kind, sd = m.group(1), m.group(2), m.group(3)
+    if sd == "-done": continue
+    size = analysis._shape_bytes(shapes_str)
+    g = analysis._group_size(line, mesh.size)
+    if g <= 1: continue
+    w = {"all-reduce": 2*size*(g-1)/g, "all-gather": size*(g-1)/g,
+         "reduce-scatter": size*(g-1), "all-to-all": size*(g-1)/g,
+         "collective-permute": size}[kind]
+    buckets[(kind, shapes_str[:60], g)] += w
+total = sum(buckets.values())
+print(f"total wire bytes (2-superblock probe, nm={nm}): {total:.3e}")
+for (kind, shp, g), w in buckets.most_common(12):
+    print(f"{w:.3e} ({100*w/total:4.1f}%) {kind:18s} g={g:4d} {shp}")

@@ -1,0 +1,149 @@
+"""Sharded checkpointing with async save (paper §6's self-restoring nodes).
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
+``manifest.json`` describing the tree. Leaves are written from host memory
+(``jax.device_get``); restore can re-place them under any sharding — that,
+plus mesh-shape-agnostic specs, is what makes restarts *elastic* (see
+``repro.ckpt.elastic``).
+
+Atomicity: writes land in ``step_<N>.tmp`` and are renamed only when
+complete, so a node killed mid-save never corrupts its latest checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent import futures
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        parts = []
+        for k in path:
+            if isinstance(k, jax.tree_util.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, jax.tree_util.SequenceKey):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def save(tree, directory: str) -> None:
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    named, _ = _flatten(tree)
+    manifest = []
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = name.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest.append({"name": name, "file": fname,
+                         "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.replace(tmp, directory)
+
+
+def restore(directory: str, like=None, shardings=None):
+    """Load a checkpoint. With ``like`` (a pytree), returns that structure;
+    otherwise returns a flat {name: array} dict. ``shardings`` (pytree or
+    flat dict) re-places leaves onto devices."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {e["name"]: np.load(os.path.join(directory, e["file"]))
+            for e in manifest}
+    if like is None:
+        return flat
+    named, treedef = _flatten(like)
+    leaves = []
+    shard_named = None
+    if shardings is not None:
+        shard_named = dict(_flatten(shardings)[0])
+    for name, ref in named:
+        if name not in flat:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = flat[name]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{name}: ckpt shape {arr.shape} != {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if shard_named is not None and name in shard_named:
+            arr = jax.device_put(arr, shard_named[name])
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Periodic, async, retention-limited checkpoints for stateful nodes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = futures.ThreadPoolExecutor(max_workers=1,
+                                                thread_name_prefix="ckpt")
+        self._pending: Optional[futures.Future] = None
+        self._lock = threading.Lock()
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        # Snapshot to host now (cheap on CPU; on TPU this is the D2H copy),
+        # write in the background so the train loop keeps stepping.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save(host_tree, self._step_dir(step))
+            self._gc()
+
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()  # one in flight at a time
+            self._pending = self._pool.submit(_write)
+            if blocking:
+                self._pending.result()
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+
+    def restore_latest(self, like, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, restore(self._step_dir(step), like, shardings)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

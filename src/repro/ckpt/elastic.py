@@ -1,0 +1,34 @@
+"""Elastic resharding: restore a checkpoint onto a *different* mesh.
+
+The failure-recovery contract (paper §6 + our scale-out): a learner that
+comes back on a smaller/larger pod slice restores the same logical state.
+Because checkpoints are full logical arrays and sharding specs are derived
+from parameter *paths* (not from the mesh they were saved under), restoring
+onto a new mesh is just re-running the rules against the new mesh and
+device_put-ting each leaf.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.ckpt import checkpoint
+from repro.sharding.rules import param_sharding
+
+
+def reshard(tree, new_mesh: Mesh):
+    """Re-place a (host or device) pytree under rules for ``new_mesh``."""
+    shardings = param_sharding(tree, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), tree, shardings)
+
+
+def restore_elastic(directory: str, like, new_mesh: Optional[Mesh] = None):
+    """Restore a checkpoint; if ``new_mesh`` is given, shard onto it."""
+    tree = checkpoint.restore(directory, like=like)
+    if new_mesh is None:
+        return tree
+    return reshard(tree, new_mesh)

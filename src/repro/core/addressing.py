@@ -1,0 +1,94 @@
+"""Address placeholders and the launch-phase address table.
+
+Paper §3.1/§3.2: during *setup*, nodes create :class:`Address` placeholders
+and attach them to their handles — physical endpoints are platform specific
+and unknown until launch. During *launch*, the launcher walks the program,
+assigns each placeholder a concrete endpoint, and records the mapping in an
+:class:`AddressTable`. Handles are serialized *after* resolution, so a
+deserialized handle on a remote worker carries its resolved endpoint.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Optional
+
+_uid = itertools.count()
+_uid_lock = threading.Lock()
+
+
+def _next_uid() -> int:
+    with _uid_lock:
+        return next(_uid)
+
+
+class Address:
+    """A placeholder for a service endpoint, resolved at launch time.
+
+    ``endpoint`` is a URI-style string once resolved, e.g.::
+
+        inproc://<name>      same-process registry (thread launcher / colocation)
+        grpc://host:port     courier-over-gRPC (process / cluster launchers)
+    """
+
+    __slots__ = ("uid", "name", "_endpoint")
+
+    def __init__(self, name: str = ""):
+        self.uid = _next_uid()
+        self.name = name
+        self._endpoint: Optional[str] = None
+
+    # -- launch phase -------------------------------------------------------
+    def resolve(self, endpoint: str) -> None:
+        if self._endpoint is not None and self._endpoint != endpoint:
+            raise RuntimeError(
+                f"Address {self.name!r} already resolved to {self._endpoint!r}; "
+                f"refusing to re-resolve to {endpoint!r}")
+        self._endpoint = endpoint
+
+    # -- execution phase ----------------------------------------------------
+    @property
+    def endpoint(self) -> str:
+        if self._endpoint is None:
+            raise RuntimeError(
+                f"Address {self.name!r} (uid={self.uid}) was dereferenced before "
+                "launch resolved it. Handles are only usable during execution.")
+        return self._endpoint
+
+    @property
+    def is_resolved(self) -> bool:
+        return self._endpoint is not None
+
+    def __repr__(self) -> str:
+        state = self._endpoint if self._endpoint else "<unresolved>"
+        return f"Address({self.name!r}, uid={self.uid}, endpoint={state})"
+
+    # Addresses are serialized inside handles; preserve resolution state.
+    def __getstate__(self):
+        return {"uid": self.uid, "name": self.name, "endpoint": self._endpoint}
+
+    def __setstate__(self, state):
+        self.uid = state["uid"]
+        self.name = state["name"]
+        self._endpoint = state["endpoint"]
+
+
+class AddressTable:
+    """Launch-phase mapping from address uid -> endpoint (paper §3.2)."""
+
+    def __init__(self):
+        self._table: dict[int, str] = {}
+
+    def assign(self, address: Address, endpoint: str) -> None:
+        self._table[address.uid] = endpoint
+        address.resolve(endpoint)
+
+    def lookup(self, address: Address) -> str:
+        return self._table[address.uid]
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def items(self):
+        return self._table.items()

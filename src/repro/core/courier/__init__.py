@@ -1,0 +1,32 @@
+"""Courier: the RPC layer under Launchpad handles (paper §4, footnote 2)."""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.courier import inprocess
+from repro.core.courier.client import CourierClient
+from repro.core.courier.serialization import RemoteError
+from repro.core.courier.server import CourierServer
+
+
+def client_for(endpoint: str) -> Any:
+    """Build the most appropriate client for a resolved endpoint.
+
+    ``inproc://name`` -> shared-memory direct client (colocated services)
+    ``grpc://host:port`` -> courier-over-gRPC client
+    """
+    if endpoint.startswith("inproc://"):
+        return inprocess.InProcessClient(endpoint[len("inproc://"):])
+    if endpoint.startswith("grpc://"):
+        return CourierClient(endpoint)
+    raise ValueError(f"unknown courier endpoint scheme: {endpoint!r}")
+
+
+__all__ = [
+    "CourierClient",
+    "CourierServer",
+    "RemoteError",
+    "client_for",
+    "inprocess",
+]

@@ -1,0 +1,109 @@
+"""Courier client: RPC proxy whose attributes are remote methods (paper §4.1).
+
+"from the perspective of any consuming class remote communication is
+invisible and it appears as if it is just using the original Python
+objects." Also exposes ``client.futures.method(...)`` returning a
+concurrent.futures.Future (used by the ES example, §5.3).
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent import futures as cf
+from typing import Any, Optional
+
+import grpc
+
+from repro.core.courier import serialization as ser
+from repro.core.courier.server import COURIER_METHOD
+
+_GRPC_OPTIONS = [
+    ("grpc.max_send_message_length", -1),
+    ("grpc.max_receive_message_length", -1),
+]
+
+
+class _GrpcFuture(cf.Future):
+    """Adapts a grpc future into a concurrent.futures.Future."""
+
+    @classmethod
+    def wrap(cls, grpc_future) -> "cf.Future":
+        out = cls()
+        out.set_running_or_notify_cancel()
+
+        def _done(gf):
+            try:
+                out.set_result(ser.decode_reply(gf.result()))
+            except BaseException as exc:  # noqa: BLE001
+                out.set_exception(exc)
+
+        grpc_future.add_done_callback(_done)
+        return out
+
+
+class _FuturesProxy:
+    def __init__(self, client: "CourierClient"):
+        self._client = client
+
+    def __getattr__(self, method: str):
+        def call(*args, **kwargs) -> cf.Future:
+            payload = ser.encode_call(method, args, kwargs)
+            gf = self._client._callable.future(
+                payload, timeout=self._client._timeout,
+                wait_for_ready=True)
+            return _GrpcFuture.wrap(gf)
+
+        return call
+
+
+class CourierClient:
+    """Client for a courier endpoint (``grpc://host:port``)."""
+
+    def __init__(self, endpoint: str, timeout: Optional[float] = None):
+        if endpoint.startswith("grpc://"):
+            endpoint = endpoint[len("grpc://"):]
+        self._endpoint = endpoint
+        self._timeout = timeout
+        self._lock = threading.Lock()
+        self._channel: Optional[grpc.Channel] = None
+        self.__callable = None
+
+    @property
+    def _callable(self):
+        with self._lock:
+            if self.__callable is None:
+                self._channel = grpc.insecure_channel(
+                    self._endpoint, options=_GRPC_OPTIONS)
+                self.__callable = self._channel.unary_unary(
+                    COURIER_METHOD,
+                    request_serializer=None,
+                    response_deserializer=None)
+            return self.__callable
+
+    @property
+    def futures(self) -> _FuturesProxy:
+        return _FuturesProxy(self)
+
+    def __getattr__(self, method: str):
+        if method.startswith("_") or method in ("futures",):
+            raise AttributeError(method)
+
+        def call(*args, **kwargs):
+            payload = ser.encode_call(method, args, kwargs)
+            # wait_for_ready: don't fail calls issued before the server
+            # node finished binding (launch is asynchronous).
+            reply = self._callable(payload, timeout=self._timeout,
+                                   wait_for_ready=True)
+            return ser.decode_reply(reply)
+
+        return call
+
+    def close(self) -> None:
+        with self._lock:
+            if self._channel is not None:
+                self._channel.close()
+                self._channel = None
+                self.__callable = None
+
+    def __repr__(self) -> str:
+        return f"CourierClient(grpc://{self._endpoint})"

@@ -1,0 +1,105 @@
+"""In-process courier channel (shared-memory fast path).
+
+Paper §4: "the Handle abstraction ... allows us to flexibly choose the most
+appropriate client type at launch phase (e.g., to use a shared-memory
+channel if the service is allocated on the same physical machine)."
+
+The thread launcher and ColocationNode resolve addresses to
+``inproc://<name>`` endpoints backed by this registry. Calls are direct
+method invocations (zero serialization), with ``.futures`` served from a
+shared thread pool, so the API is identical to the gRPC client.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent import futures
+from typing import Any, Optional
+
+_registry: dict[str, Any] = {}
+_registry_lock = threading.Lock()
+_pool: Optional[futures.ThreadPoolExecutor] = None
+_pool_lock = threading.Lock()
+
+
+def _shared_pool() -> futures.ThreadPoolExecutor:
+    global _pool
+    with _pool_lock:
+        if _pool is None:
+            _pool = futures.ThreadPoolExecutor(
+                max_workers=64, thread_name_prefix="courier-inproc")
+        return _pool
+
+
+def register(name: str, obj: Any) -> None:
+    with _registry_lock:
+        if name in _registry:
+            raise RuntimeError(f"inproc service {name!r} already registered")
+        _registry[name] = obj
+
+
+def unregister(name: str) -> None:
+    with _registry_lock:
+        _registry.pop(name, None)
+
+
+def lookup(name: str, timeout_s: float = 10.0) -> Any:
+    """Resolve a service, waiting for it to come up (launch is async:
+    a client node may start before its server node has registered)."""
+    import time
+    deadline = time.monotonic() + timeout_s
+    while True:
+        with _registry_lock:
+            if name in _registry:
+                return _registry[name]
+            known = sorted(_registry)
+        if time.monotonic() >= deadline:
+            raise RuntimeError(
+                f"inproc service {name!r} did not come up within "
+                f"{timeout_s}s (registered: {known})")
+        time.sleep(0.005)
+
+
+def reset() -> None:
+    """Test hook: clear all registered in-process services."""
+    with _registry_lock:
+        _registry.clear()
+
+
+class _FuturesProxy:
+    def __init__(self, obj: Any):
+        self._obj = obj
+
+    def __getattr__(self, method: str):
+        fn = getattr(self._obj, method)
+        pool = _shared_pool()
+
+        def call(*args, **kwargs):
+            return pool.submit(fn, *args, **kwargs)
+
+        return call
+
+
+class InProcessClient:
+    """Courier client for a same-process service: direct calls + .futures."""
+
+    def __init__(self, name: str):
+        self._name = name
+        self._obj = None
+
+    def _target(self) -> Any:
+        if self._obj is None:
+            self._obj = lookup(self._name)
+        return self._obj
+
+    @property
+    def futures(self) -> _FuturesProxy:
+        return _FuturesProxy(self._target())
+
+    def __getattr__(self, method: str):
+        if method.startswith("_"):
+            raise AttributeError(method)
+        return getattr(self._target(), method)
+
+    def __repr__(self) -> str:
+        return f"InProcessClient({self._name!r})"

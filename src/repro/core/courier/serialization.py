@@ -1,0 +1,77 @@
+"""Courier wire format.
+
+cloudpickle (protocol 5) for arbitrary Python callables/classes — the paper
+notes CourierNode "serializes the class and any given argument, which are
+then shipped over network and deserialized at execution time". JAX arrays
+are converted to numpy before pickling (device buffers don't transport);
+they come back as numpy and re-device-put lazily on use.
+"""
+
+from __future__ import annotations
+
+import io
+import pickle
+import traceback
+from typing import Any
+
+import cloudpickle
+import numpy as np
+
+
+def _to_transportable(obj: Any) -> Any:
+    """Recursively convert jax.Array leaves to numpy (cheap on CPU)."""
+    try:
+        import jax
+    except Exception:  # pragma: no cover - jax is a hard dep in this repo
+        return obj
+    if isinstance(obj, jax.Array):
+        return np.asarray(obj)
+    if isinstance(obj, (list, tuple)):
+        conv = [_to_transportable(v) for v in obj]
+        return tuple(conv) if isinstance(obj, tuple) else conv
+    if isinstance(obj, dict):
+        return {k: _to_transportable(v) for k, v in obj.items()}
+    return obj
+
+
+def dumps(obj: Any) -> bytes:
+    return cloudpickle.dumps(_to_transportable(obj), protocol=5)
+
+
+def loads(data: bytes) -> Any:
+    return pickle.loads(data)
+
+
+class RemoteError(RuntimeError):
+    """An exception raised inside a remote service, re-raised client-side."""
+
+
+# ---- call / reply framing ---------------------------------------------------
+
+def encode_call(method: str, args: tuple, kwargs: dict) -> bytes:
+    return dumps((method, args, kwargs))
+
+
+def decode_call(data: bytes) -> tuple[str, tuple, dict]:
+    return loads(data)
+
+
+def encode_reply_ok(value: Any) -> bytes:
+    return dumps(("ok", value))
+
+
+def encode_reply_error(exc: BaseException) -> bytes:
+    tb = "".join(traceback.format_exception(type(exc), exc, exc.__traceback__))
+    try:
+        payload = dumps(("err", exc, tb))
+    except Exception:
+        payload = dumps(("err", RemoteError(repr(exc)), tb))
+    return payload
+
+
+def decode_reply(data: bytes) -> Any:
+    msg = loads(data)
+    if msg[0] == "ok":
+        return msg[1]
+    _, exc, tb = msg
+    raise RemoteError(f"remote call failed:\n{tb}") from exc

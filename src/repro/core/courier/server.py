@@ -1,0 +1,96 @@
+"""Courier server: expose an arbitrary Python object over gRPC (paper §4.1).
+
+We register a *generic* unary-unary handler at ``/courier/Call`` so no
+protoc-generated stubs are needed. Requests are
+``cloudpickle((method, args, kwargs))``; replies are ``("ok", value)`` or
+``("err", exc, traceback)``.
+
+Paper semantics implemented here:
+  * all *public* methods of the wrapped object are exposed, except ``run``;
+  * if a ``run`` method exists the worker executes it, otherwise the worker
+    waits for incoming RPCs.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent import futures
+from typing import Any, Optional
+
+import grpc
+
+from repro.core.courier import serialization as ser
+
+_GRPC_OPTIONS = [
+    ("grpc.max_send_message_length", -1),
+    ("grpc.max_receive_message_length", -1),
+]
+
+COURIER_METHOD = "/courier/Call"
+
+
+class _GenericCourierHandler(grpc.GenericRpcHandler):
+    def __init__(self, handler):
+        self._handler = grpc.unary_unary_rpc_method_handler(
+            handler,
+            request_deserializer=None,   # raw bytes in
+            response_serializer=None,    # raw bytes out
+        )
+
+    def service(self, handler_call_details):
+        if handler_call_details.method == COURIER_METHOD:
+            return self._handler
+        return None
+
+
+class CourierServer:
+    """Serves the public methods of ``obj`` at a gRPC endpoint."""
+
+    def __init__(self, obj: Any, port: int = 0, host: str = "127.0.0.1",
+                 max_workers: int = 16):
+        self._obj = obj
+        self._lock = threading.Lock()  # guards lazy method lookup only
+        self._server = grpc.server(
+            futures.ThreadPoolExecutor(max_workers=max_workers,
+                                       thread_name_prefix="courier-srv"),
+            options=_GRPC_OPTIONS)
+        self._server.add_generic_rpc_handlers(
+            (_GenericCourierHandler(self._handle),))
+        self._port = self._server.add_insecure_port(f"{host}:{port}")
+        if self._port == 0:
+            raise RuntimeError(f"failed to bind courier server on {host}:{port}")
+        self._host = host
+        self._started = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        self._server.start()
+        self._started = True
+
+    def stop(self, grace: Optional[float] = 0.5) -> None:
+        if self._started:
+            self._server.stop(grace)
+            self._started = False
+
+    def wait(self) -> None:
+        self._server.wait_for_termination()
+
+    @property
+    def endpoint(self) -> str:
+        return f"grpc://{self._host}:{self._port}"
+
+    @property
+    def port(self) -> int:
+        return self._port
+
+    # -- request handling -----------------------------------------------------
+    def _handle(self, request: bytes, context) -> bytes:
+        try:
+            method, args, kwargs = ser.decode_call(request)
+            if method.startswith("_") or method == "run":
+                raise AttributeError(
+                    f"method {method!r} is not exposed over courier")
+            fn = getattr(self._obj, method)
+            return ser.encode_reply_ok(fn(*args, **kwargs))
+        except BaseException as exc:  # noqa: BLE001 - ship any failure back
+            return ser.encode_reply_error(exc)

@@ -1,0 +1,135 @@
+"""Fault-tolerance primitives (paper §6 made concrete).
+
+The paper's position: no exact (lineage) recovery — the scheduler restarts
+failed jobs; stateful nodes restore themselves from checkpoints; stateless
+nodes restart bare. We implement the scheduler half here (restart policies
+used by launchers) plus straggler mitigation for fan-out call patterns
+(hedged requests), which matters at 1000-node scale where the slowest
+evaluator/actor dictates step time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent import futures as cf
+from typing import Any, Callable, Iterable, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class RestartPolicy:
+    """How a launcher reacts to a node's executable failing.
+
+    max_restarts < 0 means restart forever (production default for stateless
+    workers); 0 means fail fast. Exponential backoff avoids crash-looping a
+    node whose dependency is still coming back.
+    """
+    max_restarts: int = 3
+    backoff_s: float = 0.05
+    backoff_multiplier: float = 2.0
+    max_backoff_s: float = 5.0
+
+    def backoff_for(self, restart_index: int) -> float:
+        return min(self.backoff_s * (self.backoff_multiplier ** restart_index),
+                   self.max_backoff_s)
+
+    def allows(self, restarts_so_far: int) -> bool:
+        return self.max_restarts < 0 or restarts_so_far < self.max_restarts
+
+
+NO_RESTART = RestartPolicy(max_restarts=0)
+ALWAYS_RESTART = RestartPolicy(max_restarts=-1)
+
+
+@dataclasses.dataclass
+class NodeFailure:
+    node_name: str
+    error: BaseException
+    restarts: int
+    fatal: bool
+
+
+def hedged_map(fns: Sequence[Callable[[], cf.Future]],
+               hedge_after_s: Optional[float] = None,
+               quorum: Optional[int] = None,
+               timeout_s: Optional[float] = None) -> list[Any]:
+    """Fan out async calls with straggler mitigation.
+
+    Each entry of ``fns`` is a zero-arg callable launching one future (e.g.
+    ``lambda: client.futures.evaluate(params)``). Semantics:
+
+      * ``hedge_after_s``: if a future hasn't resolved after this delay, the
+        call is *re-issued* and the first result wins (classic hedged
+        request / backup request).
+      * ``quorum``: return once this many results are in, cancelling the
+        rest (partial fan-in — e.g. an ES evolver that only needs the
+        fastest 80% of evaluators per generation).
+
+    Returns a list aligned with ``fns``; entries that were cancelled by the
+    quorum are ``None``.
+    """
+    n = len(fns)
+    results: list[Any] = [None] * n
+    done_flags = [False] * n
+    done_count = 0
+    target = n if quorum is None else min(quorum, n)
+    lock = threading.Lock()
+    all_done = threading.Event()
+    primary = [fn() for fn in fns]
+    hedges: list[Optional[cf.Future]] = [None] * n
+    first_error: list[Optional[BaseException]] = [None]
+
+    def _record(i: int, fut: cf.Future) -> None:
+        nonlocal done_count
+        with lock:
+            if done_flags[i]:
+                return
+            try:
+                results[i] = fut.result()
+            except cf.CancelledError:
+                return
+            except BaseException as exc:  # noqa: BLE001
+                if first_error[0] is None:
+                    first_error[0] = exc
+            done_flags[i] = True
+            done_count += 1
+            if done_count >= target:
+                all_done.set()
+
+    for i, fut in enumerate(primary):
+        fut.add_done_callback(lambda f, i=i: _record(i, f))
+
+    deadline = None if timeout_s is None else time.monotonic() + timeout_s
+    if hedge_after_s is not None:
+        # Wait for the hedge window, then re-issue whatever is unfinished.
+        if not all_done.wait(hedge_after_s):
+            for i in range(n):
+                with lock:
+                    if done_flags[i]:
+                        continue
+                try:
+                    hedge = fns[i]()
+                except BaseException as exc:  # noqa: BLE001
+                    with lock:
+                        if first_error[0] is None:
+                            first_error[0] = exc
+                    continue
+                hedges[i] = hedge
+                hedge.add_done_callback(lambda f, i=i: _record(i, f))
+
+    remaining = None if deadline is None else max(0.0, deadline - time.monotonic())
+    finished = all_done.wait(remaining)
+    if not finished and quorum is None and timeout_s is not None:
+        raise TimeoutError(
+            f"hedged_map: only {done_count}/{target} calls finished "
+            f"within {timeout_s}s")
+
+    for fut_list in (primary, hedges):
+        for fut in fut_list:
+            if fut is not None and not fut.done():
+                fut.cancel()
+
+    if first_error[0] is not None:
+        raise first_error[0]
+    return results

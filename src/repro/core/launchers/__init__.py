@@ -1,0 +1,10 @@
+from repro.core.launchers.base import Launcher
+from repro.core.launchers.dryrun import DryRunLauncher, DryRunReport
+from repro.core.launchers.process import ProcessLauncher
+from repro.core.launchers.test import ProgramTestError, launch_and_wait
+from repro.core.launchers.thread import ThreadLauncher
+
+__all__ = [
+    "Launcher", "ThreadLauncher", "ProcessLauncher", "DryRunLauncher",
+    "DryRunReport", "launch_and_wait", "ProgramTestError",
+]

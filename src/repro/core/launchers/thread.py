@@ -1,0 +1,94 @@
+"""ThreadLauncher: every executable is a thread in this process.
+
+This mirrors the open-sourced Launchpad's single-machine launcher. Services
+communicate over the in-process courier channel (``inproc://``) unless
+``force_grpc=True``, which binds real gRPC servers on localhost — useful
+for measuring the RPC overhead the paper discusses, without processes.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.core.fault import NodeFailure
+from repro.core.launchers.base import Launcher
+from repro.core.nodes.base import Executable, Node, WorkerContext
+
+
+def pick_free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class ThreadLauncher(Launcher):
+    launch_type = "thread"
+
+    def __init__(self, force_grpc: bool = False, **kwargs):
+        super().__init__(**kwargs)
+        self._force_grpc = force_grpc
+        self._stop_event = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    # -- addresses ------------------------------------------------------------
+    def _assign_address(self, node: Node, index: int) -> str:
+        if self._force_grpc:
+            return f"grpc://127.0.0.1:{pick_free_port()}"
+        return f"inproc://{node.name}/{index}"
+
+    # -- execution ------------------------------------------------------------
+    def _execute(self, node: Node, group_name: str,
+                 executables: list[Executable]) -> None:
+        policy = self.policy_for(group_name)
+
+        for ex in executables:
+            def _runner(ex: Executable = ex, node_name: str = node.name):
+                restarts = 0
+                while not self._stop_event.is_set():
+                    ctx = WorkerContext(node_name=node_name,
+                                        stop_event=self._stop_event,
+                                        stop_program_fn=self.stop)
+                    try:
+                        ex.run(ctx)
+                        return  # clean completion
+                    except BaseException as exc:  # noqa: BLE001
+                        fatal = not policy.allows(restarts)
+                        self.record_failure(NodeFailure(
+                            node_name=node_name, error=exc,
+                            restarts=restarts, fatal=fatal))
+                        if fatal:
+                            # A node out of restart budget takes the program
+                            # down (fail-fast beats a silently degraded job).
+                            self.stop()
+                            return
+                        time.sleep(policy.backoff_for(restarts))
+                        restarts += 1
+
+            t = threading.Thread(target=_runner, name=f"lp/{ex.name}", daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    # -- lifecycle --------------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for t in self._threads:
+            remaining = None
+            if deadline is not None:
+                remaining = max(0.0, deadline - time.monotonic())
+                if remaining == 0.0:
+                    return False
+            t.join(remaining)
+            if t.is_alive():
+                return False
+        return True
+
+    def stop(self) -> None:
+        self._stop_event.set()
+
+    @property
+    def fatal_failures(self) -> list[NodeFailure]:
+        return [f for f in self.failures if f.fatal]

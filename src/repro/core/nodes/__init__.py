@@ -1,0 +1,13 @@
+from repro.core.nodes.base import (Executable, Node, WorkerContext,
+                                   get_current_context, stop_program)
+from repro.core.nodes.cacher import Cacher, CacherNode
+from repro.core.nodes.colocation import ColocationNode
+from repro.core.nodes.mesh import MeshWorkerNode
+from repro.core.nodes.python import CourierHandle, CourierNode, PyNode
+from repro.core.nodes.reverb import ReverbNode
+
+__all__ = [
+    "Node", "Executable", "WorkerContext", "get_current_context",
+    "stop_program", "PyNode", "CourierNode", "CourierHandle",
+    "CacherNode", "Cacher", "ColocationNode", "MeshWorkerNode", "ReverbNode",
+]

@@ -1,0 +1,111 @@
+"""MeshWorkerNode: an SPMD (pjit) worker as a Launchpad service.
+
+This is the TPU-pod adaptation of the paper's model (DESIGN.md §2): the
+Launchpad graph is the *control plane*; inside a MeshWorkerNode the *data
+plane* is a pjit-compiled step over a device mesh. The node behaves like a
+CourierNode (deferred constructor, courier handle), but the resource
+group's requirements carry the mesh geometry, which the launcher hands to
+the service as a constructed ``jax.sharding.Mesh``::
+
+    with p.group('learner'):
+        learner = p.add_node(MeshWorkerNode(Learner, replay, ckpt_dir))
+    launcher.launch(p, resources={
+        'learner': {'mesh': (4, 2), 'axes': ('data', 'model')}})
+
+The wrapped class receives ``mesh=<Mesh>`` as a keyword argument. On a real
+multi-host platform the launcher would also set the jax distributed env
+per host; the single-machine launchers build the mesh from local devices.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.addressing import Address
+from repro.core.handles import Handle, collect_handles
+from repro.core.nodes.base import Executable, Node, WorkerContext, set_current_context
+from repro.core.nodes.python import CourierHandle, _construct
+
+
+class _MeshExecutable(Executable):
+    def __init__(self, name: str, cls, args, kwargs, address: Address,
+                 mesh_shape, mesh_axes):
+        self.name = name
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+        self._address = address
+        self._mesh_shape = mesh_shape
+        self._mesh_axes = mesh_axes
+
+    def _build_mesh(self):
+        import jax
+        n_need = 1
+        for s in self._mesh_shape:
+            n_need *= s
+        n_have = len(jax.devices())
+        if n_have < n_need:
+            raise RuntimeError(
+                f"mesh {self._mesh_shape} needs {n_need} devices, "
+                f"host platform has {n_have} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                "before jax initializes, or shrink the mesh resource)")
+        return jax.make_mesh(
+            tuple(self._mesh_shape), tuple(self._mesh_axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(self._mesh_axes))
+
+    def run(self, context: WorkerContext) -> None:
+        from repro.core import courier
+        set_current_context(context)
+        mesh = self._build_mesh()
+        obj = _construct(self._cls, self._args,
+                         dict(self._kwargs, mesh=mesh))
+        endpoint = self._address.endpoint
+        server = None
+        try:
+            if endpoint.startswith("inproc://"):
+                courier.inprocess.register(endpoint[len("inproc://"):], obj)
+            else:
+                hostport = endpoint[len("grpc://"):]
+                host, port = hostport.rsplit(":", 1)
+                server = courier.CourierServer(obj, port=int(port), host=host)
+                server.start()
+            run_fn = getattr(obj, "run", None)
+            if callable(run_fn):
+                run_fn()
+            else:
+                context.wait_for_stop()
+        finally:
+            if endpoint.startswith("inproc://"):
+                courier.inprocess.unregister(endpoint[len("inproc://"):])
+            if server is not None:
+                server.stop()
+
+
+class MeshWorkerNode(Node):
+    """A CourierNode whose service runs SPMD computation over a mesh."""
+
+    DEFAULT_MESH = ((1,), ("data",))
+
+    def __init__(self, cls, *args, **kwargs):
+        name = getattr(cls, "__name__", "MeshWorker")
+        super().__init__(name=name)
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+        self.input_handles = collect_handles((args, kwargs))
+        self._address = Address(name)
+
+    def addresses(self):
+        return (self._address,)
+
+    def create_handle(self) -> Handle:
+        h = CourierHandle(self._address)
+        self._created_handles.append(h)
+        return h
+
+    def to_executables(self, requirements: Optional[dict[str, Any]] = None,
+                       launch_type: str = "thread"):
+        reqs = requirements or {}
+        shape = tuple(reqs.get("mesh", self.DEFAULT_MESH[0]))
+        axes = tuple(reqs.get("axes", self.DEFAULT_MESH[1]))
+        if len(shape) != len(axes):
+            raise ValueError(f"mesh shape {shape} / axes {axes} mismatch")
+        return [_MeshExecutable(self.name, self._cls, self._args,
+                                self._kwargs, self._address, shape, axes)]

@@ -1,0 +1,125 @@
+"""PyNode and CourierNode (paper §4.1).
+
+Both take a Python class plus constructor arguments and act as *deferred
+constructors*: the class is not instantiated at setup (side effects must not
+happen at graph-definition time); it is serialized with its args and
+constructed at execution time, after any embedded handles are dereferenced.
+
+``PyNode``     — no handle; cannot receive messages (pure execution /
+                 communication-initiating services). Cost-saving variant.
+``CourierNode`` — additionally starts a courier server exposing the public
+                 methods of the constructed object; its handle dereferences
+                 to an RPC client.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Any, Optional
+
+from repro.core import courier
+from repro.core.addressing import Address
+from repro.core.handles import Handle, collect_handles, map_handles
+from repro.core.nodes.base import Executable, Node, WorkerContext, set_current_context
+
+logger = logging.getLogger(__name__)
+
+
+class CourierHandle(Handle):
+    def dereference(self) -> Any:
+        return courier.client_for(self.address.endpoint)
+
+
+def _construct(cls, args, kwargs):
+    """Dereference embedded handles, then build the service object."""
+    args = map_handles(list(args), lambda h: h.dereference())
+    kwargs = map_handles(dict(kwargs), lambda h: h.dereference())
+    return cls(*args, **kwargs)
+
+
+class _PyExecutable(Executable):
+    """Runs construct() then the object's run() method (if any)."""
+
+    def __init__(self, name: str, cls, args, kwargs):
+        self.name = name
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+
+    def run(self, context: WorkerContext) -> None:
+        set_current_context(context)
+        obj = _construct(self._cls, self._args, self._kwargs)
+        run_fn = getattr(obj, "run", None)
+        if callable(run_fn):
+            run_fn()
+        else:
+            context.wait_for_stop()
+
+
+class _CourierExecutable(Executable):
+    """Start a courier server for the object, then run()/wait (paper §4.1)."""
+
+    def __init__(self, name: str, cls, args, kwargs, address: Address):
+        self.name = name
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+        self._address = address
+
+    def run(self, context: WorkerContext) -> None:
+        set_current_context(context)
+        obj = _construct(self._cls, self._args, self._kwargs)
+        endpoint = self._address.endpoint
+        server = None
+        try:
+            if endpoint.startswith("inproc://"):
+                courier.inprocess.register(endpoint[len("inproc://"):], obj)
+            elif endpoint.startswith("grpc://"):
+                hostport = endpoint[len("grpc://"):]
+                host, port = hostport.rsplit(":", 1)
+                server = courier.CourierServer(obj, port=int(port), host=host)
+                server.start()
+            else:
+                raise ValueError(f"unknown endpoint scheme {endpoint!r}")
+
+            run_fn = getattr(obj, "run", None)
+            if callable(run_fn):
+                run_fn()
+            else:
+                context.wait_for_stop()
+        finally:
+            if endpoint.startswith("inproc://"):
+                courier.inprocess.unregister(endpoint[len("inproc://"):])
+            if server is not None:
+                server.stop()
+
+
+class PyNode(Node):
+    def __init__(self, cls, *args, **kwargs):
+        name = getattr(cls, "__name__", "PyNode")
+        super().__init__(name=name)
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+        self.input_handles = collect_handles((args, kwargs))
+
+    def create_handle(self) -> Optional[Handle]:
+        return None  # PyNodes cannot receive messages.
+
+    def to_executables(self, requirements=None, launch_type="thread"):
+        return [_PyExecutable(self.name, self._cls, self._args, self._kwargs)]
+
+
+class CourierNode(Node):
+    def __init__(self, cls, *args, **kwargs):
+        name = getattr(cls, "__name__", "CourierNode")
+        super().__init__(name=name)
+        self._cls, self._args, self._kwargs = cls, args, kwargs
+        self.input_handles = collect_handles((args, kwargs))
+        self._address = Address(name)
+
+    def addresses(self):
+        return (self._address,)
+
+    def create_handle(self) -> Handle:
+        h = CourierHandle(self._address)
+        self._created_handles.append(h)
+        return h
+
+    def to_executables(self, requirements=None, launch_type="thread"):
+        return [_CourierExecutable(self.name, self._cls, self._args,
+                                   self._kwargs, self._address)]

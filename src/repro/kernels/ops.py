@@ -1,0 +1,61 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to auto: real kernels on TPU, interpret-mode
+execution elsewhere (this container is CPU-only — interpret mode runs the
+kernel body in Python for correctness validation; see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssm_scan as _ssm
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
+def decode_attention(q, k, v, valid, block_l: int = 512,
+                     interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _dec.decode_attention(q, k, v, valid, block_l=block_l,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w",
+                                             "interpret"))
+def rglru_scan(a, x, h0, block_s: int = 256, block_w: int = 128,
+               interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _rg.rglru_scan(a, x, h0, block_s=block_s, block_w=block_w,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "interpret"))
+def ssm_scan(u, delta, A, B, C, D, h0, block_s: int = 128,
+             block_d: int = 128, interpret: Optional[bool] = None):
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _ssm.ssm_scan(u, delta, A, B, C, D, h0, block_s=block_s,
+                         block_d=block_d, interpret=interpret)

@@ -1,0 +1,298 @@
+"""Dry-run cell construction: per-(arch × shape) step functions, abstract
+inputs (ShapeDtypeStruct — no allocation), shardings, and the napkin-math
+cell plan (microbatching / remat / residual sharding) that makes each cell
+fit a 16 GiB v5e chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer
+from repro.models.config import (ALL_SHAPES, ModelConfig, ShapeConfig,
+                                 shape_applicability)
+from repro.serve import decode as serve_lib
+from repro.sharding import ShardingCtx, use_sharding
+from repro.sharding.rules import batch_spec, fit_spec, param_sharding
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainConfig, make_train_state,
+                                    make_train_step, train_state_shapes)
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# Cell plan: napkin math -> microbatching / remat / residual sharding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    num_microbatches: int = 1
+    remat: str = "full"
+    grad_accum_dtype: str = "float32"
+    resid_tp: bool = False        # shard saved residuals over TP (FSDP+SP)
+    unroll_micro: bool = False    # probes only: unrolled microbatch loop
+    notes: str = ""
+
+
+def _train_mem_estimate(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        nm: int, resid_tp: bool) -> float:
+    """Per-device live activation bytes at microbatch size b_local/nm."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    bm = max(shape.global_batch // dp // nm, 1)
+    S = shape.seq_len
+    # remat=full saves superblock inputs [bm, S, D] bf16 per layer.
+    width_factor = 2.0 if cfg.family == "ssm" else 1.0
+    resid = bm * S * cfg.d_model * 2 * cfg.num_layers * width_factor
+    if resid_tp:
+        resid /= tp
+    # Live attention logits (f32 + softmax copy), padded heads over TP.
+    attn = 0.0
+    if cfg.num_heads:
+        hp = cfg.num_heads + ((-cfg.num_heads) % tp)
+        span = min(S, cfg.window or S)
+        attn = bm * (hp / tp) * min(S, 2048 * 2) * span * 4 * 2
+    return resid + attn
+
+
+def plan_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> CellPlan:
+    if shape.kind != "train":
+        return CellPlan(notes="forward-only: no activation accumulation")
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_local = max(shape.global_batch // dp, 1)
+    budget = 2.5e9
+    nm, resid_tp = 1, False
+    while nm < b_local and _train_mem_estimate(cfg, shape, mesh, nm,
+                                               resid_tp) > budget:
+        nm *= 2
+    if _train_mem_estimate(cfg, shape, mesh, nm, resid_tp) > budget:
+        resid_tp = True   # microbatch of 1 still too big: SP the residuals
+    est = _train_mem_estimate(cfg, shape, mesh, nm, resid_tp)
+    accum = "bfloat16" if cfg.param_count() > 5e10 else "float32"
+    return CellPlan(num_microbatches=nm, remat="full",
+                    grad_accum_dtype=accum, resid_tp=resid_tp,
+                    notes=f"b_local={b_local} est_act={est/1e9:.2f}GB")
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _dp(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    def leaf(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = batch_spec(mesh, x.ndim)
+        # Divisibility fit: long_500k has global_batch=1 — stays replicated.
+        return NamedSharding(mesh, fit_spec(mesh, x.shape, tuple(spec)))
+    return jax.tree.map(leaf, batch_tree)
+
+
+def state_shardings(mesh: Mesh, state_tree):
+    """Decode-state sharding: batch over DP; KV heads (or failing that the
+    cache length), recurrent widths over TP."""
+    dp = _dp(mesh)
+
+    def leaf(path, x):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        stacked = any(getattr(k, "key", None) == "blocks" for k in path)
+        core = x.shape[1:] if stacked else x.shape
+        if name in ("k", "v", "k_mem", "v_mem"):     # [B, L, KV, dh]
+            spec = [dp, None, "model", None]
+            if core[2] % mesh.shape["model"]:
+                spec = [dp, "model", None, None]     # shard cache length
+        elif name == "h" and len(core) == 3:          # mamba [B, Di, N]
+            spec = [dp, "model", None]
+        elif name == "h":                             # rg-lru [B, W]
+            spec = [dp, "model"]
+        elif name == "conv":                          # [B, K-1, W/Di]
+            spec = [dp, None, "model"]
+        else:
+            spec = [None] * len(core)
+        if stacked:
+            spec = [None] + spec
+        return NamedSharding(mesh, fit_spec(mesh, x.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_tree)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model-input batch for one step (the paper-shape cell)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((B, 1), jnp.int32)}
+    batch: dict[str, Any] = {}
+    if cfg.family == "audio":
+        batch["embeddings"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            batch["targets"] = _sds((B, S), jnp.int32)
+            batch["mask"] = _sds((B, S), jnp.float32)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                         jnp.bfloat16)
+    return batch
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Public helper (brief requirement): ShapeDtypeStruct stand-ins for
+    every model input of the given cell."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    specs = {"batch": batch_specs(cfg, shape)}
+    if shape.kind == "train":
+        params, opt = train_state_shapes(cfg)
+        specs["params"], specs["opt_state"] = params, opt
+    else:
+        specs["params"] = serve_param_shapes(cfg)
+        if shape.kind == "decode":
+            specs["state"] = transformer.decode_state_spec(
+                cfg, shape.global_batch, shape.seq_len)
+    return specs
+
+
+def serve_param_shapes(cfg: ModelConfig):
+    """Inference params are bf16."""
+    shapes = transformer.param_shapes(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)
+
+
+# ---------------------------------------------------------------------------
+# Step builders: (fn, abstract_args, in_shardings, out_shardings, donate)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellStep:
+    fn: Any
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    plan: CellPlan
+    model_flops_per_device: float
+
+
+def _model_flops(cfg: ModelConfig, shape: ShapeConfig, n_dev: int) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_dev
+    return 2.0 * n_active * shape.global_batch / n_dev  # decode: 1 tok/seq
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               plan: Optional[CellPlan] = None) -> CellStep:
+    plan = plan or plan_cell(cfg, shape, mesh)
+    n_dev = mesh.size
+    mflops = _model_flops(cfg, shape, n_dev)
+    batch = batch_specs(cfg, shape)
+    batch_sh = batch_shardings(mesh, batch)
+
+    if shape.kind == "train":
+        tc = TrainConfig(
+            optimizer=OptimizerConfig(),
+            num_microbatches=plan.num_microbatches,
+            remat=plan.remat,
+            grad_accum_dtype=plan.grad_accum_dtype,
+            resid_tp=plan.resid_tp,
+            unroll_micro=plan.unroll_micro)
+        step = make_train_step(cfg, tc)
+        params, opt = train_state_shapes(cfg)
+        p_sh = param_sharding(params, mesh)
+        o_sh = param_sharding(opt, mesh)
+        return CellStep(
+            fn=step, args=(params, opt, batch),
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1), plan=plan,
+            model_flops_per_device=mflops)
+
+    params = serve_param_shapes(cfg)
+    p_sh = param_sharding(params, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.decode_supported:
+            fn = serve_lib.make_prefill(cfg, context_len=shape.seq_len)
+            def prefill_fn(params, batch):
+                logits, state = fn(params, batch.get("tokens"),
+                                   memory=batch.get("image_embeds"),
+                                   embeddings=batch.get("embeddings"))
+                return logits.astype(jnp.bfloat16), state
+            state = transformer.decode_state_spec(cfg, shape.global_batch,
+                                                  shape.seq_len)
+            out_sh = (None, state_shardings(mesh, state))
+        else:
+            def prefill_fn(params, batch):
+                hidden, _ = transformer.forward(
+                    cfg, params, tokens=batch.get("tokens"),
+                    embeddings=batch.get("embeddings"),
+                    memory=batch.get("image_embeds"))
+                logits = transformer.logits_from_hidden(cfg, params, hidden)
+                return logits.astype(jnp.bfloat16)
+            out_sh = None
+        return CellStep(
+            fn=prefill_fn, args=(params, batch),
+            in_shardings=(p_sh, batch_sh),
+            out_shardings=out_sh,
+            donate_argnums=(), plan=plan,
+            model_flops_per_device=mflops)
+
+    # decode
+    state = transformer.decode_state_spec(cfg, shape.global_batch,
+                                          shape.seq_len)
+    s_sh = state_shardings(mesh, state)
+    serve_step = serve_lib.make_serve_step(cfg)
+    t = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, state, tokens, t):
+        return serve_step(params, state, tokens, t)
+
+    return CellStep(
+        fn=decode_fn,
+        args=(params, state, batch["tokens"], t),
+        in_shardings=(p_sh, s_sh, batch_sh["tokens"], NamedSharding(mesh, P())),
+        out_shardings=(None, s_sh),
+        donate_argnums=(1,), plan=plan,
+        model_flops_per_device=mflops)
+
+
+def lower_cell(cell: CellStep, mesh: Mesh):
+    """Trace+lower under the activation-sharding context for ``mesh``."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ctx = ShardingCtx(mesh, dp=dp, tp=("model",))
+    jitted = jax.jit(cell.fn,
+                     in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate_argnums)
+    with use_sharding(ctx):
+        return jitted.lower(*cell.args)

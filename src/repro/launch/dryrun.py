@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before jax (or anything importing jax)
+# initializes: jax locks the device count on first init, and the dry-run
+# needs 512 placeholder host devices to build the production meshes.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape) cell:
+
+  * single-pod mesh (16×16):  full-config ``lower().compile()`` — the
+    memory/sharding proof (memory_analysis recorded) — plus two unrolled
+    depth probes (1 and 2 superblocks) for exact per-layer HLO FLOPs /
+    bytes / collective bytes (see repro.roofline.analysis).
+  * multi-pod mesh (2×16×16): full-config ``lower().compile()`` — proves
+    the 'pod' axis shards (DP over DCN).
+
+Results land in ``artifacts/dryrun/<mesh>/<arch>__<shape>.json``; cells
+that are structurally inapplicable record their skip reason.
+
+Usage:
+    python -m repro.launch.dryrun                      # everything
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    python -m repro.launch.dryrun --mesh multi --skip-existing
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.models import scan_utils
+from repro.models.config import ALL_SHAPES, shape_applicability
+from repro.roofline import analysis, hw
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _probe_cfg(cfg, n_superblocks: int):
+    return dataclasses.replace(cfg, num_layers=n_superblocks * len(cfg.pattern))
+
+
+def _compile_cell(cfg, shape, mesh, plan=None):
+    cell = cells_lib.build_cell(cfg, shape, mesh, plan=plan)
+    t0 = time.time()
+    lowered = cells_lib.lower_cell(cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return cell, compiled, t1 - t0, t2 - t1
+
+
+def _probe_costs(cfg, shape, mesh, plan):
+    """Unrolled 1- and 2-superblock compiles -> extrapolated per-step cost."""
+    from repro.models import attention
+    # Probes keep the production microbatch count but UNROLL the micro loop
+    # (scan bodies are cost-counted once), so per-microbatch weight
+    # all-gathers / grad reduce-scatters are visible. The per-device batch
+    # is identical either way; FLOPs/bytes totals match production.
+    probe_plan = dataclasses.replace(plan, unroll_micro=True)
+    saved_thresh = transformer.SCAN_UNROLL_THRESHOLD
+    saved_chunk = scan_utils.FORCE_SINGLE_CHUNK
+    saved_mode = attention.CHUNK_MODE
+    transformer.SCAN_UNROLL_THRESHOLD = 4
+    scan_utils.FORCE_SINGLE_CHUNK = True
+    attention.CHUNK_MODE = "unrolled"
+    try:
+        costs = []
+        for n_sb in (1, 2):
+            pcfg = _probe_cfg(cfg, n_sb)
+            _, compiled, _, _ = _compile_cell(pcfg, shape, mesh, probe_plan)
+            costs.append(analysis.cost_from_compiled(compiled, mesh.size))
+        micro_scale = plan.num_microbatches if shape.kind == "train" else 1.0
+        # probes run one microbatch of the full global batch; production
+        # runs num_micro microbatches of 1/num_micro the size -> identical
+        # totals, so micro_scale stays 1 for flops/bytes. (Kept explicit.)
+        total = analysis.extrapolate(costs[0], costs[1],
+                                     cfg.num_layers / len(cfg.pattern),
+                                     micro_scale=1.0)
+        return total, costs
+    finally:
+        transformer.SCAN_UNROLL_THRESHOLD = saved_thresh
+        scan_utils.FORCE_SINGLE_CHUNK = saved_chunk
+        attention.CHUNK_MODE = saved_mode
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             with_probes: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = cells_lib.SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "mesh_shape": list(tuple(mesh.shape.values())),
+                    "devices": mesh.size}
+
+    skip = shape_applicability(cfg, shape)
+    if skip:
+        record.update(status="skipped", reason=skip)
+        return record
+
+    try:
+        plan = cells_lib.plan_cell(cfg, shape, mesh)
+        cell, compiled, lower_s, compile_s = _compile_cell(cfg, shape, mesh, plan)
+        ma = compiled.memory_analysis()
+        record.update(
+            status="ok",
+            plan=dataclasses.asdict(plan),
+            lower_s=round(lower_s, 2), compile_s=round(compile_s, 2),
+            memory={
+                "argument_gb": ma.argument_size_in_bytes / 1e9,
+                "output_gb": ma.output_size_in_bytes / 1e9,
+                "temp_gb": ma.temp_size_in_bytes / 1e9,
+                "alias_gb": ma.alias_size_in_bytes / 1e9,
+                "peak_estimate_gb": (ma.argument_size_in_bytes
+                                     + ma.output_size_in_bytes
+                                     + ma.temp_size_in_bytes
+                                     - ma.alias_size_in_bytes) / 1e9,
+                "hbm_gb": hw.HBM_BYTES / 1e9,
+            },
+        )
+        full_coll = analysis.parse_collectives(compiled.as_text(), mesh.size)
+        record["full_compile_collectives"] = full_coll.counts
+
+        if with_probes and not multi:
+            cost, probes = _probe_costs(cfg, shape, mesh, plan)
+            roof = analysis.roofline_from_cost(cost, cell.model_flops_per_device)
+            record["cost"] = {
+                "flops_per_device": cost.flops,
+                "bytes_per_device": cost.bytes_accessed,
+                "wire_bytes_per_device": cost.wire_bytes,
+                "collective_counts": cost.collective_counts,
+            }
+            record["roofline"] = {
+                "compute_s": roof.compute_s,
+                "memory_s": roof.memory_s,
+                "collective_s": roof.collective_s,
+                "bound": roof.bound,
+                "step_s": roof.step_s,
+                "model_flops_per_device": roof.model_flops,
+                "useful_flops_ratio": roof.useful_flops_ratio,
+                "mfu": roof.mfu,
+            }
+    except Exception as exc:  # noqa: BLE001
+        record.update(status="error", error=repr(exc),
+                      traceback=traceback.format_exc())
+    return record
+
+
+def cell_list():
+    out = []
+    for arch in configs.ARCH_NAMES:
+        for shape in ALL_SHAPES:
+            out.append((arch, shape.name))
+    return out
+
+
+def artifact_path(arch, shape, mesh_kind):
+    d = os.path.abspath(os.path.join(ARTIFACT_DIR, mesh_kind))
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = [(a, s) for a, s in cell_list()
+            if (args.arch is None or a == args.arch)
+            and (args.shape is None or s == args.shape)]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch, shape in todo:
+            path = artifact_path(arch, shape, mesh_kind)
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    rec = json.load(f)
+            else:
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_kind,
+                               with_probes=not args.no_probes)
+                rec["wall_s"] = round(time.time() - t0, 1)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            st = rec["status"]
+            n_ok += st == "ok"; n_skip += st == "skipped"; n_err += st == "error"
+            extra = ""
+            if st == "ok" and "roofline" in rec:
+                r = rec["roofline"]
+                extra = (f" bound={r['bound']} step={r['step_s']*1e3:.1f}ms "
+                         f"mfu={r['mfu']:.3f}")
+            if st == "ok":
+                extra += f" peak={rec['memory']['peak_estimate_gb']:.1f}GB"
+            if st == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{mesh_kind:6s}] {arch:22s} {shape:12s} {st:7s}"
+                  f"{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""Batched LM serving as a Launchpad program.
+
+    frontend clients (CourierNode × N)
+      -> batcher (CourierNode: request queue -> batched generate)
+      -> model server (MeshWorkerNode: prefill + decode over its mesh)
+
+The batcher implements continuous request coalescing: it drains up to
+``max_batch`` queued prompts, pads them to one batch, and runs
+prefill+decode once — the standard serving pattern expressed as Launchpad
+topology.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro import configs, core as lp
+from repro.models.config import ModelConfig
+from repro.serve import decode as serve_lib
+
+
+class ModelServer:
+    """Holds params; serves batched generate() on its mesh."""
+
+    def __init__(self, model_cfg: ModelConfig, max_new: int = 8, mesh=None):
+        import jax
+        from repro.models import transformer
+        self._cfg = model_cfg
+        self._max_new = max_new
+        self._params = transformer.init_params(model_cfg, jax.random.key(0))
+
+    def generate(self, prompts):
+        import jax.numpy as jnp
+        toks = jnp.asarray(np.asarray(prompts, np.int32))
+        out = serve_lib.generate(self._cfg, self._params, toks,
+                                 max_new=self._max_new,
+                                 context_len=toks.shape[1] + self._max_new)
+        return np.asarray(out)
+
+
+class Batcher:
+    """Coalesces concurrent requests into model-server batches."""
+
+    def __init__(self, server, max_batch: int = 8, max_wait_s: float = 0.02):
+        self._server = server
+        self._q: queue.Queue = queue.Queue()
+        self._max_batch = max_batch
+        self._max_wait = max_wait_s
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        self.batches = []
+
+    def submit(self, prompt):
+        """Blocking request: returns the completed sequence."""
+        done = queue.Queue(maxsize=1)
+        self._q.put((np.asarray(prompt, np.int32), done))
+        return done.get(timeout=120)
+
+    def _loop(self):
+        while True:
+            first = self._q.get()
+            group = [first]
+            deadline = time.monotonic() + self._max_wait
+            while len(group) < self._max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    group.append(self._q.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            prompts = np.stack([g[0] for g in group])
+            outs = self._server.generate(prompts)
+            self.batches.append(len(group))
+            for (_, done), row in zip(group, outs):
+                done.put(row)
+
+    def stats(self):
+        return {"batches": list(self.batches)}
+
+
+class Client:
+    def __init__(self, batcher, meter, num_requests: int, prompt_len: int,
+                 vocab: int, seed: int):
+        self._batcher = batcher
+        self._meter = meter
+        self._n = num_requests
+        self._rng = np.random.default_rng(seed)
+        self._plen = prompt_len
+        self._vocab = vocab
+
+    def run(self):
+        for _ in range(self._n):
+            prompt = self._rng.integers(0, self._vocab, self._plen)
+            t0 = time.monotonic()
+            out = self._batcher.submit(prompt)
+            self._meter.record(time.monotonic() - t0, len(out))
+
+
+class Meter:
+    def __init__(self, expected: int):
+        self._expected = expected
+        self._lat = []
+        self._lock = threading.Lock()
+
+    def record(self, latency_s: float, out_len: int):
+        with self._lock:
+            self._lat.append(latency_s)
+            done = len(self._lat) >= self._expected
+        if done:
+            lat = np.array(self._lat)
+            print(f"served {len(lat)} requests: "
+                  f"p50={np.percentile(lat, 50)*1e3:.1f}ms "
+                  f"p95={np.percentile(lat, 95)*1e3:.1f}ms")
+            lp.stop_program()
+
+
+def build_program(model_cfg: ModelConfig, *, num_clients=3,
+                  requests_per_client=4, prompt_len=8,
+                  max_new=8) -> lp.Program:
+    p = lp.Program(f"serve-{model_cfg.name}")
+    with p.group("server"):
+        server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
+                                              max_new=max_new))
+    with p.group("batcher"):
+        batcher = p.add_node(lp.CourierNode(Batcher, server))
+    meter = p.add_node(lp.CourierNode(
+        Meter, num_clients * requests_per_client))
+    with p.group("client"):
+        for i in range(num_clients):
+            p.add_node(lp.CourierNode(
+                Client, batcher, meter, requests_per_client, prompt_len,
+                model_cfg.vocab_size, seed=i))
+    return p
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=4,
+                    help="requests per client")
+    args = ap.parse_args(argv)
+    cfg = (configs.get_reduced(args.arch) if args.arch
+           else configs.get_reduced("qwen2-1.5b"))
+    program = build_program(cfg, num_clients=args.clients,
+                            requests_per_client=args.requests)
+    print(program)
+    lp.launch_and_wait(program, timeout_s=600)
+
+
+if __name__ == "__main__":
+    main()

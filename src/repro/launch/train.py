@@ -1,0 +1,232 @@
+"""End-to-end LM training as a Launchpad program.
+
+Topology (the paper's patterns composed):
+
+    data (CourierNode × N, prefetching pipeline shards)
+      -> learner (MeshWorkerNode: pjit train loop, self-checkpointing)
+      -> evaluator (PyNode: pulls params, reports eval loss)
+
+The learner is a *stateful node in the paper-§6 sense*: on restart it
+restores from its latest checkpoint and continues; data nodes and the
+evaluator are stateless and just restart.
+
+    PYTHONPATH=src python -m repro.launch.train --steps 200
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced
+    PYTHONPATH=src python -m repro.launch.train --preset lm100m --steps 300
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro import configs, core as lp
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, make_source
+from repro.models.config import ATTN, ModelConfig
+from repro.sharding import ShardingCtx, use_sharding
+from repro.sharding.rules import batch_spec, param_sharding
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import (TrainConfig, make_train_state,
+                                    make_train_step)
+
+# A self-contained ~100M-param preset (brief: "train ~100M model").
+LM100M = ModelConfig(
+    name="lm100m", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, d_ff=3072, vocab_size=32768,
+    pattern=(ATTN,), tie_embeddings=True)
+
+LM_TINY = ModelConfig(
+    name="lm-tiny", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=512,
+    pattern=(ATTN,), tie_embeddings=True)
+
+PRESETS = {"lm100m": LM100M, "tiny": LM_TINY}
+
+
+class DataNode:
+    """Serves host-sharded batches from the pipeline (prefetched)."""
+
+    def __init__(self, data_cfg: DataConfig, host_id: int, num_hosts: int):
+        self._pf = Prefetcher(make_source(data_cfg, host_id, num_hosts),
+                              depth=4)
+
+    def next_batch(self):
+        return next(self._pf)
+
+
+class Learner:
+    """SPMD learner: pjit train step over the node's mesh; checkpoints and
+    serves params. Restores itself after restarts (paper §6)."""
+
+    def __init__(self, model_cfg, train_cfg, data_nodes, ckpt_dir,
+                 total_steps, ckpt_every=50, log_every=10, mesh=None):
+        import jax
+        import jax.numpy as jnp
+
+        self._cfg = model_cfg
+        self._data = data_nodes
+        self._total = total_steps
+        self._ckpt_every = ckpt_every
+        self._log_every = log_every
+        self._mesh = mesh
+        self._mgr = CheckpointManager(ckpt_dir, keep=2)
+        self._jnp = jnp
+
+        params, opt = make_train_state(model_cfg, jax.random.key(0))
+        self._start_step = 0
+        step0, restored = self._mgr.restore_latest(
+            {"params": params, "opt": opt})
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            self._start_step = step0
+            print(f"learner: restored checkpoint at step {step0}")
+        if mesh is not None:
+            p_sh = param_sharding(params, mesh)
+            o_sh = param_sharding(opt, mesh)
+            params = jax.tree.map(jax.device_put, params, p_sh)
+            opt = jax.tree.map(jax.device_put, opt, o_sh)
+        self._params, self._opt = params, opt
+        self._step_fn = jax.jit(make_train_step(model_cfg, train_cfg),
+                                donate_argnums=(0, 1))
+        self._latest_loss = float("nan")
+
+    # -- courier-exposed -----------------------------------------------------
+    def get_params(self):
+        import jax
+        return jax.tree.map(np.asarray, self._params)
+
+    def status(self):
+        return {"loss": self._latest_loss}
+
+    # -- main loop -------------------------------------------------------------
+    def run(self):
+        import jax.numpy as jnp
+        ctx = lp.get_current_context()
+        dp = (ShardingCtx(self._mesh) if self._mesh is not None else None)
+        t0 = time.time()
+        losses = []
+        step = self._start_step
+        with use_sharding(dp):
+            while step < self._total and not ctx.should_stop:
+                shards = [d.next_batch() for d in self._data]
+                batch = {k: np.concatenate([s[k] for s in shards])
+                         for k in shards[0]}
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                self._params, self._opt, metrics = self._step_fn(
+                    self._params, self._opt, batch)
+                step += 1
+                self._latest_loss = float(metrics["loss"])
+                losses.append(self._latest_loss)
+                if step % self._log_every == 0:
+                    rate = self._log_every / max(time.time() - t0, 1e-9)
+                    t0 = time.time()
+                    print(f"step {step:5d} loss={self._latest_loss:7.4f} "
+                          f"lr={float(metrics['lr']):.2e} "
+                          f"gnorm={float(metrics['grad_norm']):6.3f} "
+                          f"{rate:5.2f} steps/s", flush=True)
+                if step % self._ckpt_every == 0:
+                    self._mgr.save(step, {"params": self._params,
+                                          "opt": self._opt})
+        self._mgr.save(step, {"params": self._params, "opt": self._opt},
+                       blocking=True)
+        first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+        last = np.mean(losses[-10:])
+        print(f"learner done at step {step}: loss {first:.4f} -> {last:.4f}")
+        lp.stop_program()
+
+
+class Evaluator:
+    """Pulls params periodically and scores a held-out stream."""
+
+    def __init__(self, learner, model_cfg, data_cfg, every_s=5.0):
+        self._learner = learner
+        self._cfg = model_cfg
+        self._src = iter(make_source(dataclasses.replace(data_cfg, seed=999)))
+        self._every = every_s
+
+    def run(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer
+        ctx = lp.get_current_context()
+        while not ctx.should_stop:
+            ctx.wait_for_stop(self._every)
+            if ctx.should_stop:
+                return
+            params = jax.tree.map(jnp.asarray, self._learner.get_params())
+            batch = next(self._src)
+            loss, _ = transformer.loss_fn(
+                self._cfg, params,
+                {k: jnp.asarray(v) for k, v in batch.items()})
+            print(f"  eval loss: {float(loss):.4f}", flush=True)
+
+
+def build_program(model_cfg: ModelConfig, *, steps: int, ckpt_dir: str,
+                  batch_size: int = 16, seq_len: int = 64,
+                  num_data_nodes: int = 2, num_micro: int = 1,
+                  mesh_shape=None, with_eval: bool = True) -> lp.Program:
+    data_cfg = DataConfig(seq_len=seq_len,
+                          batch_size=batch_size // num_data_nodes,
+                          vocab_size=model_cfg.vocab_size)
+    train_cfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=steps),
+        num_microbatches=num_micro)
+
+    p = lp.Program(f"train-{model_cfg.name}")
+    with p.group("data"):
+        data = [p.add_node(lp.CourierNode(DataNode, data_cfg, i,
+                                          num_data_nodes))
+                for i in range(num_data_nodes)]
+    with p.group("learner"):
+        learner = p.add_node(lp.MeshWorkerNode(
+            Learner, model_cfg, train_cfg, data, ckpt_dir, steps))
+    if with_eval:
+        with p.group("eval"):
+            p.add_node(lp.PyNode(Evaluator, learner, model_cfg, data_cfg))
+    return p
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="assigned arch id")
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of --arch")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2,1 -> data=2,model=1 (needs devices)")
+    args = ap.parse_args(argv)
+
+    if args.arch:
+        model_cfg = (configs.get_reduced(args.arch) if args.reduced
+                     else configs.get(args.arch))
+    else:
+        model_cfg = PRESETS[args.preset]
+
+    program = build_program(model_cfg, steps=args.steps,
+                            ckpt_dir=args.ckpt_dir,
+                            batch_size=args.batch_size,
+                            seq_len=args.seq_len)
+    resources = {}
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        resources["learner"] = {"mesh": shape,
+                                "axes": ("data", "model")[: len(shape)]}
+    print(program)
+    launcher = lp.ThreadLauncher(
+        restart_policy=lp.RestartPolicy(max_restarts=2))
+    launcher.launch(program, resources or None)
+    launcher.wait()
+    if launcher.fatal_failures:
+        raise SystemExit(f"fatal failure: {launcher.fatal_failures[0]}")
+
+
+if __name__ == "__main__":
+    main()

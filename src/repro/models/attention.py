@@ -1,0 +1,339 @@
+"""GQA self-attention (global / sliding-window / local / bidirectional),
+cross-attention, and the single-token decode path against a KV cache.
+
+The XLA einsum path below is the reference data plane used by the dry-run
+(Pallas kernels cannot lower for the CPU placeholder backend); the Pallas
+flash kernels in ``repro.kernels`` implement the same contract for TPU and
+are validated against ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import current_ctx, shard
+
+NEG_INF = -2.0 ** 30
+
+
+def _tp_size() -> int:
+    ctx = current_ctx()
+    if ctx is None:
+        return 1
+    axes = ctx.resolve("tp") or ()
+    n = 1
+    for a in ((axes,) if isinstance(axes, str) else axes):
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _pad_heads(x: jax.Array, hp: int) -> jax.Array:
+    """Zero-pad the head dim (axis 2) to ``hp`` heads."""
+    pad = hp - x.shape[2]
+    if pad == 0:
+        return x
+    z = jnp.zeros(x.shape[:2] + (pad, x.shape[3]), x.dtype)
+    return jnp.concatenate([x, z], axis=2)
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": layers.init_linear(ks[0], d, h * dh, bias=cfg.qkv_bias),
+        "wk": layers.init_linear(ks[1], d, kv * dh, bias=cfg.qkv_bias),
+        "wv": layers.init_linear(ks[2], d, kv * dh, bias=cfg.qkv_bias),
+        "wo": layers.init_linear(ks[3], h * dh, d, scale=(h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def _headwise_rms(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt((x * x).mean(-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, xq: jax.Array, xkv: jax.Array):
+    B, Sq = xq.shape[:2]
+    Skv = xkv.shape[1]
+    q = layers.apply_linear(p["wq"], xq).reshape(B, Sq, cfg.num_heads, cfg.head_dim)
+    k = layers.apply_linear(p["wk"], xkv).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = layers.apply_linear(p["wv"], xkv).reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = _headwise_rms(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = _headwise_rms(k, p["k_norm"]["scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def _chunked_sdpa_map(cfg: ModelConfig, q, k, v, causal: bool,
+                      window: Optional[int]) -> jax.Array:
+    """Query-chunked attention under lax.map: one chunk's logits live at a
+    time. For windowed attention K/V are dynamic-sliced to the reachable
+    band (O(S·window) compute); causal full attention keeps full-length K
+    per chunk (rectangle, ~2× triangle FLOPs — the Pallas kernel does the
+    triangle on TPU)."""
+    B, S, H, dh = q.shape
+    nc = S // Q_CHUNK
+    assert S % Q_CHUNK == 0, (S, Q_CHUNK)
+    if window is not None:
+        klen = min(S, window + Q_CHUNK)
+    else:
+        klen = S
+
+    def chunk_fn(i):
+        q0 = i * Q_CHUNK
+        qc = jax.lax.dynamic_slice_in_dim(q, q0, Q_CHUNK, axis=1)
+        if klen == S:
+            kc, vc, k0 = k, v, jnp.int32(0)
+        else:
+            k0 = jnp.maximum(q0 + Q_CHUNK - klen, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k, k0, klen, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k0, klen, axis=1)
+        q_pos = (q0 + jnp.arange(Q_CHUNK, dtype=jnp.int32))[None]
+        k_pos = (k0 + jnp.arange(klen, dtype=jnp.int32))[None]
+        bias = _mask_bias(cfg, q_pos, k_pos, causal, window)[:, None]
+        return _sdpa(cfg, qc, kc, vc, bias)       # [B, Qc, H, dh]
+
+    out = jax.lax.map(chunk_fn, jnp.arange(nc, dtype=jnp.int32))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+
+
+def _mask_bias(cfg: ModelConfig, q_pos: jax.Array, k_pos: jax.Array,
+               causal: bool, window: Optional[int]) -> jax.Array:
+    """[.., Sq, Sk] additive mask from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
+    """q [B,Sq,H,dh], k/v [B,Sk,KV,dh], bias [B,1,Sq,Sk] fp32.
+
+    XLA-path attention: KV heads are expanded to the query-head count and
+    the head dim is zero-padded up to a multiple of the TP axis, so logits
+    shard as P(dp, tp, None, None) with no exotic 5-D reshards (those push
+    the SPMD partitioner onto broken 'last-resort' paths). Pad heads cost
+    extra FLOPs for the 12/24/10-head archs — visible in the roofline
+    useful-FLOPs ratio; the Pallas kernel keeps true GQA on TPU.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    tp = _tp_size()
+    Hp = H + ((-H) % tp)
+    q, k, v = _pad_heads(q, Hp), _pad_heads(k, Hp), _pad_heads(v, Hp)
+    q = shard(q, "dp", None, "tp", None)
+    k = shard(k, "dp", None, "tp", None)
+    v = shard(v, "dp", None, "tp", None)
+    ldt = jnp.dtype(LOGITS_DTYPE)
+    # The dot must EMIT ldt for the bytes win — a downstream astype would
+    # still materialize the f32 tensor (MXU accumulation is fp32 either way).
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=ldt)
+    logits = logits * jnp.asarray(dh ** -0.5, ldt)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = logits + bias.astype(ldt)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, v)
+    return out[:, :, :H, :]
+
+
+# Query-chunk size for the XLA attention path: bounds the materialized
+# [B, H, Qc, S] logits (the Pallas flash kernel replaces this on TPU; the
+# chunking here is the same blocking expressed at the XLA level).
+Q_CHUNK = 2048
+
+# "map": chunks run under lax.map (a while loop) — structurally sequential,
+#        so peak memory is ONE chunk's logits. Production default.
+# "unrolled": python loop — XLA's scheduler may overlap chunks (memory grows
+#        with chunk count) but FLOPs are visible to cost analysis; used by
+#        the roofline probes and small-S paths.
+CHUNK_MODE = "map"
+
+# Attention-logits dtype (hillclimb lever): fp32 is the safe default; bf16
+# halves the dominant HBM term of the XLA attention path at a bounded
+# accuracy cost (softmax max-subtraction keeps exponents in range). The
+# Pallas kernel always accumulates fp32 in VMEM, where bandwidth is free.
+LOGITS_DTYPE = "float32"
+
+
+def self_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                   positions: jax.Array, kind: str,
+                   return_kv: bool = False):
+    """Full-sequence self-attention (train / prefill)."""
+    causal = cfg.causal
+    window = cfg.window if kind in ("swa", "local") else None
+    q, k, v = _project_qkv(cfg, p, x, x)
+    if cfg.rope:
+        sin, cos = layers.rope_freqs(cfg, positions)
+        q = layers.apply_rope(q, sin, cos)
+        k = layers.apply_rope(k, sin, cos)
+    B, S = x.shape[:2]
+    if S <= 2 * Q_CHUNK:
+        bias = _mask_bias(cfg, positions, positions, causal, window)[:, None]
+        out = _sdpa(cfg, q, k, v, bias)
+    elif CHUNK_MODE == "map":
+        out = _chunked_sdpa_map(cfg, q, k, v, causal, window)
+    else:
+        # Unrolled python loop: accurate triangle FLOPs for the roofline
+        # probes (K sliced to the reachable band per chunk).
+        chunks = []
+        for q0 in range(0, S, Q_CHUNK):
+            q1 = min(q0 + Q_CHUNK, S)
+            k0 = max(0, q0 - window) if window is not None else 0
+            k1 = q1 if causal else S
+            q_pos = positions[:, q0:q1]
+            k_pos = positions[:, k0:k1]
+            bias = _mask_bias(cfg, q_pos, k_pos, causal, window)[:, None]
+            chunks.append(_sdpa(cfg, q[:, q0:q1],
+                                k[:, k0:k1], v[:, k0:k1], bias))
+        out = jnp.concatenate(chunks, axis=1)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = layers.apply_linear(p["wo"], out)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _shard_cache(x: jax.Array) -> jax.Array:
+    """KV-cache sharding: batch over DP; KV heads over TP when divisible,
+    else the cache length (decode reduces over L -> psum)."""
+    tp = _tp_size()
+    if tp > 1 and x.shape[2] % tp == 0:
+        return shard(x, "dp", None, "tp", None)
+    return shard(x, "dp", "tp", None, None)
+
+
+def build_cache_from_full(cfg: ModelConfig, k: jax.Array, v: jax.Array,
+                          context_len: int, kind: str, dtype) -> dict:
+    """Scatter full-sequence K/V (prefill) into the ring-cache layout."""
+    B, S = k.shape[:2]
+    window = cfg.window if kind in ("swa", "local") else None
+    L = min(context_len, window) if window else context_len
+    keep = min(S, L)
+    pos = jnp.arange(S - keep, S)
+    slots = jnp.mod(pos, L)
+    ck = jnp.zeros((B, L, cfg.num_kv_heads, cfg.head_dim), dtype)
+    cv = jnp.zeros((B, L, cfg.num_kv_heads, cfg.head_dim), dtype)
+    ck = ck.at[:, slots].set(k[:, S - keep:].astype(dtype))
+    cv = cv.at[:, slots].set(v[:, S - keep:].astype(dtype))
+    return {"k": _shard_cache(ck), "v": _shard_cache(cv)}
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                    memory: jax.Array) -> jax.Array:
+    """Cross-attention to frontend embeddings (VLM). No RoPE, no mask."""
+    q, k, v = _project_qkv(cfg, p, x, memory)
+    B, Sq = x.shape[:2]
+    Sk = memory.shape[1]
+    bias = jnp.zeros((B, 1, Sq, Sk), jnp.float32)
+    out = _sdpa(cfg, q, k, v, bias)
+    out = out.reshape(B, Sq, cfg.num_heads * cfg.head_dim)
+    return layers.apply_linear(p["wo"], out)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: one new token against a (possibly windowed) KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, context_len: int,
+                  kind: str, dtype) -> dict:
+    """Cache for one attention layer. SWA/local keep only a window ring."""
+    window = cfg.window if kind in ("swa", "local") else None
+    L = min(context_len, window) if window else context_len
+    shape = (batch, L, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, context_len: int,
+                  kind: str, dtype) -> dict:
+    window = cfg.window if kind in ("swa", "local") else None
+    L = min(context_len, window) if window else context_len
+    shape = (batch, L, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def _sdpa_grouped(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
+    """GQA attention without KV expansion — decode path.
+
+    One query token means no S² tensors, so the grouped einsum is safe and
+    avoids materializing H-times-expanded K/V over the whole cache (which
+    costs GQA-ratio × cache bytes in temps). Reduction over the (possibly
+    TP-sharded) cache length L becomes a psum.
+    """
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32)
+    logits = logits * (dh ** -0.5)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = logits + bias[:, :, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                     t: jax.Array, kind: str) -> tuple[jax.Array, dict]:
+    """x [B,1,D]; ``t`` is the absolute position of the new token.
+
+    The cache ring-buffers the last ``L`` tokens (L = full context or the
+    SWA window). Returns (attn output [B,1,D], updated cache).
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    window = cfg.window if kind in ("swa", "local") else None
+
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    pos_new = jnp.full((B, 1), t, jnp.int32)
+    if cfg.rope:
+        sin, cos = layers.rope_freqs(cfg, pos_new)
+        q = layers.apply_rope(q, sin, cos)
+        k_new = layers.apply_rope(k_new, sin, cos)
+
+    # Ring write via mask-select, NOT dynamic_update_slice: a DUS onto the
+    # TP-sharded cache-length dim makes the partitioner all-gather the whole
+    # cache every layer; the where() is elementwise along L and stays local.
+    slot = jnp.mod(t, L)
+    lane = jnp.arange(L, dtype=jnp.int32)[None, :, None, None] == slot
+    k = jnp.where(lane, k_new.astype(cache["k"].dtype), cache["k"])
+    v = jnp.where(lane, v_new.astype(cache["v"].dtype), cache["v"])
+
+    # Absolute position of every cache slot given the ring layout: slot i
+    # holds the most recent token congruent to i mod L that is <= t.
+    idx = jnp.arange(L, dtype=jnp.int32)
+    k_pos = t - jnp.mod(t - idx, L)          # in (t-L, t]
+    valid = k_pos >= 0
+    if window is not None:
+        valid &= (t - k_pos) < window
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = jnp.broadcast_to(bias[None, None, None, :], (B, 1, 1, L))
+
+    out = _sdpa_grouped(cfg, q, k.astype(q.dtype), v.astype(q.dtype), bias)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return layers.apply_linear(p["wo"], out), {"k": k, "v": v}

@@ -1,0 +1,188 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings. Pure-JAX, dict params."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None) -> dict:
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+# Dtype in which norm *tensors* live (hillclimb lever). "float32" (default)
+# upcasts the whole [B,S,D] activation; on a TP-sharded residual the
+# partitioner then places the feature all-gather in the f32 domain — 2× the
+# wire and HBM bytes. "compute" keeps tensor-sized values in the compute
+# dtype and does only the reductions (mean/var) in fp32.
+NORM_RESIDENT_DTYPE = "float32"
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if NORM_RESIDENT_DTYPE == "float32":
+        # Reference path: everything in fp32, output in compute dtype.
+        x = x.astype(jnp.float32)
+        if cfg.norm == "layernorm":
+            x = x - x.mean(-1, keepdims=True)
+        var = (x * x).mean(-1, keepdims=True)
+        x = x * jax.lax.rsqrt(var + cfg.norm_eps)
+        x = x * p["scale"]
+        if cfg.norm == "layernorm":
+            x = x + p["bias"]
+        return x.astype(dt)
+    # bf16-resident path: tensor-sized values stay in `dt`; the statistics
+    # are still accumulated in fp32 (inputs upcast inside the reduction).
+    if cfg.norm == "layernorm":
+        mu = x.astype(jnp.float32).mean(-1, keepdims=True)
+        x = x - mu.astype(dt)
+    var = jnp.square(x.astype(jnp.float32)).mean(-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + cfg.norm_eps)
+    x = x * inv.astype(dt)
+    x = x * p["scale"].astype(dt)
+    if cfg.norm == "layernorm":
+        x = x + p["bias"].astype(dt)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                scale: Optional[float] = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"kernel": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def apply_linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"].astype(x.dtype)
+    if "bias" in p:
+        y = y + p["bias"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions [B, S] (int) -> (sin, cos) each [B, S, head_dim/2], fp32."""
+    dh = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, dh/2]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, S, H, dh]; rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :].astype(x.dtype)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense; MoE lives in moe.py)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_linear(ks[0], d, f, bias=cfg.mlp_bias),
+            "w_up": init_linear(ks[1], d, f, bias=cfg.mlp_bias),
+            "w_down": init_linear(ks[2], f, d, bias=cfg.mlp_bias,
+                                  scale=f ** -0.5),
+        }
+    return {
+        "w_up": init_linear(ks[0], d, f, bias=cfg.mlp_bias),
+        "w_down": init_linear(ks[1], f, d, bias=cfg.mlp_bias, scale=f ** -0.5),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(apply_linear(p["w_gate"], x)) * apply_linear(p["w_up"], x)
+    else:
+        h = jax.nn.gelu(apply_linear(p["w_up"], x))
+    h = shard(h, "dp", None, "tp")
+    return apply_linear(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"tokens": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                     jnp.float32) * (cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["head"] = init_linear(ks[1], cfg.d_model, cfg.vocab_size)
+    if cfg.conv_pos:
+        # HuBERT-style depthwise-ish grouped conv positional embedding.
+        w = cfg.conv_pos_width
+        g = cfg.conv_pos_groups
+        p["conv_pos"] = jax.random.normal(
+            ks[2], (w, cfg.d_model // g, cfg.d_model), jnp.float32
+        ) * ((w * cfg.d_model // g) ** -0.5)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["tokens"].astype(cdtype(cfg))[tokens]
+    # The table is vocab-(row-)sharded over the FSDP axis; XLA partitions
+    # the gather via its masked-lookup + all-reduce path and the output
+    # lands DP-sharded. (Feature-sharded tables + an output constraint
+    # trip an XLA SPMD bug: invalid dynamic-slice after partitioning.)
+    x = shard(x, "dp", None, None)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def add_conv_pos(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if "conv_pos" not in p:
+        return x
+    # grouped 1-D conv over sequence, SAME padding.
+    pos = jax.lax.conv_general_dilated(
+        x, p["conv_pos"].astype(x.dtype),
+        window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=cfg.conv_pos_groups)
+    return x + jax.nn.gelu(pos)
+
+
+def lm_logits(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        # The table lives feature-sharded (good for the lookup); reshard it
+        # vocab-sharded here so logits come out P(dp, None, tp) from a local
+        # matmul — one table-sized collective per step instead of
+        # materializing replicated [B,S,V] logits.
+        w = shard(p["tokens"], "tp", None)
+        return x @ w.astype(x.dtype).T
+    return apply_linear(p["head"], x)

@@ -1,0 +1,151 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t)                  (recurrence gate, block-diag)
+    i_t = sigmoid(W_x x_t)                  (input gate, block-diag)
+    a_t = exp(-c * softplus(Λ) * r_t)       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t²) * (i_t * x_t)
+
+Full-sequence mode uses an associative scan over S (log-depth — TPU
+friendly); decode mode is a single state update. The block wraps the
+recurrence with in/out projections and a short temporal conv, per Griffin.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+_C = 8.0
+_MAX_SQRT_GRADIENT = 1000.0
+
+
+def init_rglru_block(cfg: ModelConfig, key) -> dict:
+    d, w, hds = cfg.d_model, cfg.lru_width, cfg.lru_heads
+    ks = jax.random.split(key, 7)
+    blk = w // hds
+    # Λ init so that a ∈ [0.9, 0.999] roughly (Griffin appendix).
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "in_x": layers.init_linear(ks[1], d, w),
+        "in_gate": layers.init_linear(ks[2], d, w),
+        "conv1d": jax.random.normal(ks[3], (cfg.conv1d_width, w), jnp.float32)
+                  * (cfg.conv1d_width ** -0.5),
+        "gate_a": jax.random.normal(ks[4], (hds, blk, blk), jnp.float32) * blk ** -0.5,
+        "gate_x": jax.random.normal(ks[5], (hds, blk, blk), jnp.float32) * blk ** -0.5,
+        "bias_a": jnp.zeros((w,), jnp.float32),
+        "bias_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": layers.init_linear(ks[6], w, d, scale=w ** -0.5),
+    }
+
+
+def _block_diag(p: dict, which: str, x: jax.Array) -> jax.Array:
+    """[B,S,W] through block-diagonal [heads, blk, blk] weights."""
+    B, S, W = x.shape
+    hds, blk, _ = p[f"gate_{which}"].shape
+    xh = x.reshape(B, S, hds, blk)
+    y = jnp.einsum("bshi,hij->bshj", xh, p[f"gate_{which}"].astype(x.dtype))
+    return y.reshape(B, S, W) + p[f"bias_{which}"].astype(x.dtype)
+
+
+def _conv1d(p: dict, x: jax.Array, state: jax.Array | None = None):
+    """Causal depthwise conv width K. state [B, K-1, W] for decode."""
+    K = p["conv1d"].shape[0]
+    w = p["conv1d"].astype(x.dtype)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(K - 1):, :]
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out, new_state
+
+
+def _gates(cfg: ModelConfig, p: dict, x: jax.Array):
+    r = jax.nn.sigmoid(_block_diag(p, "a", x).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(p, "x", x).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r           # [B,S,W] fp32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    gated = mult * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_scan(cfg: ModelConfig, p: dict, x: jax.Array,
+               h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU recurrence. x [B,S,W] -> (y [B,S,W], h_S)."""
+    a, gated = _gates(cfg, p, x)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h + a_cum * h0[:, None, :]
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(cfg: ModelConfig, p: dict, x: jax.Array,
+               h: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. x [B,1,W], h [B,W] fp32."""
+    a, gated = _gates(cfg, p, x)
+    h_new = a[:, 0] * h + gated[:, 0]
+    return h_new.astype(x.dtype)[:, None, :], h_new
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    K = cfg.conv1d_width
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_state_spec(cfg: ModelConfig, batch: int) -> dict:
+    K = cfg.conv1d_width
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, cfg.lru_width), jnp.float32),
+    }
+
+
+def apply_rglru_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                      state: dict | None = None, want_state: bool = False):
+    """Griffin recurrent block: gate branch ⊙ GELU branch, then out-proj.
+
+    x [B,S,D] -> [B,S,D]. With ``state`` (decode) S must be 1; returns
+    (out, new_state). ``want_state=True`` (prefill) returns the final
+    recurrence/conv state of a full-sequence pass.
+    """
+    from repro.models.scan_utils import chunked_recurrence, pick_chunk
+
+    gate = jax.nn.gelu(layers.apply_linear(p["in_gate"], x))      # [B,S,W]
+    xin = layers.apply_linear(p["in_x"], x)                        # [B,S,W]
+    xin = shard(xin, "dp", None, "tp")
+    if state is None:
+        xin_raw = xin
+        xin, conv_tail = _conv1d(p, xin)
+        h0 = jnp.zeros((x.shape[0], cfg.lru_width), jnp.float32)
+        y, h_last = chunked_recurrence(
+            lambda xc, h: rglru_scan(cfg, p, xc, h), xin, h0,
+            chunk=pick_chunk(x.shape[1]))
+        new_state = None
+        if want_state:
+            new_state = {"h": h_last.astype(jnp.float32),
+                         "conv": conv_tail.astype(jnp.float32)}
+    else:
+        xin, conv_state = _conv1d(p, xin, state["conv"])
+        y, h_new = rglru_step(cfg, p, xin, state["h"])
+        new_state = {"h": h_new, "conv": conv_state.astype(jnp.float32)}
+    out = layers.apply_linear(p["out"], y * gate)
+    return out, new_state

@@ -1,0 +1,53 @@
+"""Chunked linear-recurrence driver.
+
+``associative_scan`` over the full sequence materializes O(S·state)
+intermediates (for Mamba that's [B,S,Di,N] — 3.4e13 bytes at train_4k).
+Instead we ``lax.scan`` over sequence chunks, carrying the recurrent state
+across chunk boundaries and running the log-depth associative scan only
+within a chunk. This bounds live memory to one chunk's intermediates and is
+the same blocking the Pallas kernels use on TPU (HBM -> VMEM tiles).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Roofline cost-probe hook: XLA cost analysis counts while-loop bodies once,
+# so probes force a single chunk (no lax.scan) to expose the full
+# per-layer FLOPs. Never set in production paths (memory!).
+FORCE_SINGLE_CHUNK = False
+
+
+def chunked_recurrence(seq_fn: Callable, x: jax.Array, init_state,
+                       chunk: int = 512):
+    """Run ``seq_fn(x_chunk, h0) -> (y_chunk, h_last)`` over S in chunks.
+
+    x: [B, S, ...] with S divisible by ``chunk`` (callers pad if needed).
+    Returns (y [B, S, ...], final_state).
+    """
+    B, S = x.shape[0], x.shape[1]
+    if S <= chunk or FORCE_SINGLE_CHUNK:
+        return seq_fn(x, init_state)
+    if S % chunk:
+        raise ValueError(f"seq len {S} not divisible by chunk {chunk}")
+    n = S // chunk
+    xs = x.reshape(B, n, chunk, *x.shape[2:]).swapaxes(0, 1)  # [n,B,chunk,...]
+
+    def body(h, xc):
+        y, h_new = seq_fn(xc, h)
+        return h_new, y
+
+    h_last, ys = jax.lax.scan(body, init_state, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, *ys.shape[3:])
+    return y, h_last
+
+
+def pick_chunk(seq_len: int, target: int = 512) -> int:
+    """Largest divisor of seq_len that is <= target (>= 1)."""
+    c = min(seq_len, target)
+    while seq_len % c:
+        c -= 1
+    return c

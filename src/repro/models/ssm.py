@@ -1,0 +1,157 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba).
+
+    x -> in_proj -> (u, z)                u: [B,S,Di], z: gate branch
+    u -> causal depthwise conv(K) -> silu
+    (Δ, B, C) from u via x_proj/dt_proj;  A = -exp(A_log) [Di,N]
+    h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t u_t     (diagonal A ⇒ per-channel)
+    y_t = C_t · h_t + D u_t
+    out = out_proj(y * silu(z))
+
+Full-sequence mode uses an associative scan over S; decode keeps
+(h [B,Di,N], conv tail) as state. FLOPs are dominated by in/out
+projections, as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.sharding import shard
+
+# Dtype of the associative-scan elements dA/dBu (hillclimb lever). fp32 is
+# the reference; bf16 halves the dominant [B,S,Di,N] HBM traffic of the
+# XLA path. The recurrent carry at chunk boundaries stays fp32 either way
+# (the Pallas kernel keeps the whole state fp32 in VMEM).
+SCAN_DTYPE = "float32"
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba_block(cfg: ModelConfig, key) -> dict:
+    d, di, n, r = cfg.d_model, d_inner(cfg), cfg.ssm_state, cfg.ssm_dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": layers.init_linear(ks[0], d, 2 * di),
+        "conv1d": jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                  * (cfg.ssm_conv ** -0.5),
+        "conv_bias": jnp.zeros((di,), jnp.float32),
+        "x_proj": layers.init_linear(ks[2], di, r + 2 * n),
+        "dt_proj": layers.init_linear(ks[3], r, di, bias=True),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.init_linear(ks[4], di, d, scale=di ** -0.5),
+    }
+
+
+def _conv1d(p: dict, u: jax.Array, state: jax.Array | None = None):
+    K = p["conv1d"].shape[0]
+    w = p["conv1d"].astype(u.dtype)
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+        new_state = up[:, -(K - 1):, :]
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+        new_state = up[:, -(K - 1):, :]
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return out + p["conv_bias"].astype(u.dtype), new_state
+
+
+def _ssm_params(cfg: ModelConfig, p: dict, u: jax.Array):
+    """u [B,S,Di] -> Δ [B,S,Di], B/C [B,S,N] (fp32)."""
+    n, r = cfg.ssm_state, cfg.ssm_dt_rank
+    dbc = layers.apply_linear(p["x_proj"], u)
+    dt, Bc, Cc = jnp.split(dbc, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(layers.apply_linear(p["dt_proj"], dt).astype(jnp.float32))
+    return delta, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def selective_scan(cfg: ModelConfig, p: dict, u: jax.Array,
+                   h0: jax.Array | None = None):
+    """Full-sequence scan. u [B,S,Di] -> (y [B,S,Di], h_S [B,Di,N])."""
+    A = -jnp.exp(p["A_log"])                                   # [Di,N]
+    delta, Bc, Cc = _ssm_params(cfg, p, u)
+    uf = u.astype(jnp.float32)
+    sdt = jnp.dtype(SCAN_DTYPE)
+    # Discretize: a_t = exp(Δ_t ⊗ A)  [B,S,Di,N];  b_t = Δ_t u_t ⊗ B_t.
+    dA = jnp.exp(delta[..., None] * A[None, None]).astype(sdt)
+    dBu = ((delta * uf)[..., None] * Bc[:, :, None, :]).astype(sdt)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    h = h.astype(jnp.float32)
+    if h0 is not None:
+        h = h + a_cum.astype(jnp.float32) * h0[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc)
+    y = y + uf * p["D"]
+    return y.astype(u.dtype), h[:, -1]
+
+
+def selective_step(cfg: ModelConfig, p: dict, u: jax.Array, h: jax.Array):
+    """One token. u [B,1,Di], h [B,Di,N] -> (y [B,1,Di], h')."""
+    A = -jnp.exp(p["A_log"])
+    delta, Bc, Cc = _ssm_params(cfg, p, u)
+    uf = u.astype(jnp.float32)
+    dA = jnp.exp(delta[:, 0, :, None] * A[None])               # [B,Di,N]
+    dBu = (delta[:, 0] * uf[:, 0])[..., None] * Bc[:, 0, None, :]
+    h_new = dA * h + dBu
+    y = jnp.einsum("bdn,bn->bd", h_new, Cc[:, 0])
+    y = y + uf[:, 0] * p["D"]
+    return y.astype(u.dtype)[:, None], h_new
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> dict:
+    di, n, K = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), jnp.float32),
+    }
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int) -> dict:
+    di, n, K = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, K - 1, di), jnp.float32),
+    }
+
+
+def apply_mamba_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                      state: dict | None = None, want_state: bool = False):
+    """x [B,S,D] -> [B,S,D]; with state (decode) S must be 1.
+
+    ``want_state=True`` (prefill) returns the final SSM/conv state of a
+    full-sequence pass.
+    """
+    uz = layers.apply_linear(p["in_proj"], x)
+    uz = shard(uz, "dp", None, "tp")
+    u, z = jnp.split(uz, 2, axis=-1)
+    if state is None:
+        from repro.models.scan_utils import chunked_recurrence, pick_chunk
+        u_raw, conv_tail = _conv1d(p, u)
+        u = jax.nn.silu(u_raw)
+        h0 = jnp.zeros((x.shape[0], d_inner(cfg), cfg.ssm_state), jnp.float32)
+        y, h_last = chunked_recurrence(
+            lambda uc, h: selective_scan(cfg, p, uc, h), u, h0,
+            chunk=pick_chunk(x.shape[1], 256))
+        new_state = None
+        if want_state:
+            new_state = {"h": h_last.astype(jnp.float32),
+                         "conv": conv_tail.astype(jnp.float32)}
+    else:
+        u, conv_state = _conv1d(p, u, state["conv"])
+        u = jax.nn.silu(u)
+        y, h_new = selective_step(cfg, p, u, state["h"])
+        new_state = {"h": h_new, "conv": conv_state.astype(jnp.float32)}
+    out = layers.apply_linear(p["out_proj"], y * jax.nn.silu(z))
+    return out, new_state

@@ -1,0 +1,421 @@
+"""Backbone assembly: superblock pattern -> scan over repeats -> LM heads.
+
+The layer stack is ``cfg.pattern`` repeated ``cfg.num_repeats`` times (with
+stacked params under ``jax.lax.scan``) plus an unrolled remainder. The same
+block functions serve training/prefill (full sequence) and decode (single
+token + recurrent/KV state).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, ssm
+from repro.models.config import (ATTN, LOCAL, MAMBA, RGLRU, SWA, XATTN,
+                                 ModelConfig)
+from repro.sharding import shard
+
+# When num_repeats <= this threshold the repeat loop is unrolled in Python
+# instead of lax.scan. The roofline cost-probe sets it (scan/while bodies
+# are counted ONCE by XLA cost analysis, so per-layer costs must come from
+# unrolled compiles); production configs keep scan for compile-time/HLO-size
+# independence from depth.
+SCAN_UNROLL_THRESHOLD = 0
+
+
+def _repeat_blocks(body, carry, stacked_params, extra=None):
+    """lax.scan over stacked superblocks, or an unrolled Python loop."""
+    length = jax.tree.leaves(stacked_params)[0].shape[0]
+    xs = stacked_params if extra is None else (stacked_params, extra)
+    if length <= SCAN_UNROLL_THRESHOLD:
+        ys = []
+        for i in range(length):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            carry, y = body(carry, xi)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+        else:
+            ys = None
+        return carry, ys
+    return jax.lax.scan(body, carry, xs)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm": layers.init_norm(cfg)}
+    if kind in (ATTN, SWA, LOCAL, XATTN):
+        p["attn"] = attention.init_attention(cfg, ks[0], cross=(kind == XATTN))
+        p["mlp_norm"] = layers.init_norm(cfg)
+        if cfg.num_experts:
+            p["mlp"] = moe.init_moe(cfg, ks[1])
+        else:
+            p["mlp"] = layers.init_mlp(cfg, ks[1])
+    elif kind == RGLRU:
+        p["rglru"] = rglru.init_rglru_block(cfg, ks[0])
+        p["mlp_norm"] = layers.init_norm(cfg)
+        p["mlp"] = layers.init_mlp(cfg, ks[1])
+    elif kind == MAMBA:
+        p["mamba"] = ssm.init_mamba_block(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_superblock(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {str(i): _init_block(cfg, kind, ks[i])
+            for i, kind in enumerate(cfg.pattern)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_embed, k_blocks, k_tail = jax.random.split(key, 3)
+    params: dict[str, Any] = {"embed": layers.init_embed(cfg, k_embed)}
+    if cfg.num_repeats:
+        rep_keys = jax.random.split(k_blocks, cfg.num_repeats)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_superblock(cfg, k))(rep_keys)
+    if cfg.remainder:
+        tail_keys = jax.random.split(k_tail, len(cfg.remainder))
+        params["tail"] = {str(i): _init_block(cfg, kind, tail_keys[i])
+                          for i, kind in enumerate(cfg.remainder)}
+    params["final_norm"] = layers.init_norm(cfg)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    """Abstract param tree (no allocation) — used by the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                 positions: jax.Array, memory: Optional[jax.Array]):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(cfg, p["norm"], x)
+    if kind in (ATTN, SWA, LOCAL):
+        h = attention.self_attention(cfg, p["attn"], h, positions, kind)
+    elif kind == XATTN:
+        h = attention.cross_attention(cfg, p["attn"], h, memory)
+    elif kind == RGLRU:
+        h, _ = rglru.apply_rglru_block(cfg, p["rglru"], h)
+    elif kind == MAMBA:
+        h, _ = ssm.apply_mamba_block(cfg, p["mamba"], h)
+    x = x + h
+    x = shard(x, "dp", None, None)
+    if kind != MAMBA:
+        h = layers.apply_norm(cfg, p["mlp_norm"], x)
+        if cfg.num_experts:
+            h, aux = moe.apply_moe(cfg, p["mlp"], h)
+        else:
+            h = layers.apply_mlp(cfg, p["mlp"], h)
+        x = x + h
+        x = shard(x, "dp", None, None)
+    return x, aux
+
+
+def _apply_superblock(cfg: ModelConfig, p: dict, x: jax.Array,
+                      positions: jax.Array, memory: Optional[jax.Array]):
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.pattern):
+        x, a = _apply_block(cfg, kind, p[str(i)], x, positions, memory)
+        aux = aux + a
+    return x, aux
+
+
+def forward(cfg: ModelConfig, params: dict, *,
+            tokens: Optional[jax.Array] = None,
+            embeddings: Optional[jax.Array] = None,
+            memory: Optional[jax.Array] = None,
+            remat: bool = False,
+            resid_tp: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (hidden [B,S,D], aux_loss).
+
+    ``resid_tp`` feature-shards the residual stream at superblock
+    boundaries (FSDP+SP): the tensors remat saves for backward shrink by
+    the TP width at the cost of per-layer feature all-gathers.
+    """
+    if embeddings is not None:
+        x = embeddings.astype(layers.cdtype(cfg))     # audio frontend stub
+    else:
+        x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = layers.add_conv_pos(cfg, params["embed"], x)
+    resid_spec = ("dp", None, "tp") if resid_tp else ("dp", None, None)
+    x = shard(x, *resid_spec)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if memory is not None:
+        memory = memory.astype(x.dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def sb_fn(blk_params, h, positions, memory):
+        h, a = _apply_superblock(cfg, blk_params, h, positions, memory)
+        return shard(h, *resid_spec), a
+    if remat:
+        sb_fn = jax.checkpoint(
+            sb_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if "blocks" in params:
+        def body(carry, blk_params):
+            h, aux = carry
+            h, a = sb_fn(blk_params, h, positions, memory)
+            return (h, aux + a), None
+        (x, aux_total), _ = _repeat_blocks(body, (x, aux_total),
+                                           params["blocks"])
+
+    if "tail" in params:
+        for i, kind in enumerate(cfg.remainder):
+            x, a = _apply_block(cfg, kind, params["tail"][str(i)], x,
+                                positions, memory)
+            aux_total = aux_total + a
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def logits_from_hidden(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    logits = layers.lm_logits(cfg, params["embed"], x)
+    return shard(logits, "dp", None, "tp")
+
+
+def cross_entropy(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Vocab-sharding-friendly CE: one-hot contraction, no gather."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    true_logit = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - true_logit
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict,
+            remat: bool = False, resid_tp: bool = False
+            ) -> tuple[jax.Array, dict]:
+    """Language-model / masked-prediction loss over one (micro)batch."""
+    hidden, aux = forward(
+        cfg, params,
+        tokens=batch.get("tokens"),
+        embeddings=batch.get("embeddings"),
+        memory=batch.get("image_embeds"),
+        remat=remat, resid_tp=resid_tp)
+    logits = logits_from_hidden(cfg, params, hidden)
+    if cfg.causal and "targets" not in batch:
+        # Next-token prediction: shift within the provided sequence.
+        ce = cross_entropy(cfg, logits[:, :-1], batch["labels"][:, 1:],
+                           batch.get("mask")[:, 1:] if batch.get("mask")
+                           is not None else None)
+    else:
+        # Encoder (HuBERT): predict per-position targets at masked frames.
+        ce = cross_entropy(cfg, logits, batch["targets"], batch.get("mask"))
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence pass that also builds the decode state
+# ---------------------------------------------------------------------------
+
+def _prefill_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                   positions: jax.Array, memory: Optional[jax.Array],
+                   context_len: int, cache_dtype):
+    """Like _apply_block but also returns the block's decode state."""
+    h = layers.apply_norm(cfg, p["norm"], x)
+    if kind in (ATTN, SWA, LOCAL):
+        h, (k, v) = attention.self_attention(cfg, p["attn"], h, positions,
+                                             kind, return_kv=True)
+        state = attention.build_cache_from_full(cfg, k, v, context_len, kind,
+                                                cache_dtype)
+    elif kind == XATTN:
+        h = attention.cross_attention(cfg, p["attn"], h, memory)
+        _, k_mem, v_mem = attention._project_qkv(cfg, p["attn"],
+                                                 h[:, :1], memory)
+        state = {"k_mem": k_mem.astype(cache_dtype),
+                 "v_mem": v_mem.astype(cache_dtype)}
+    elif kind == RGLRU:
+        h, state = rglru.apply_rglru_block(cfg, p["rglru"], h,
+                                           want_state=True)
+    elif kind == MAMBA:
+        h, state = ssm.apply_mamba_block(cfg, p["mamba"], h, want_state=True)
+    else:
+        raise ValueError(kind)
+    x = x + h
+    if kind != MAMBA:
+        h = layers.apply_norm(cfg, p["mlp_norm"], x)
+        if cfg.num_experts:
+            h, _ = moe.apply_moe(cfg, p["mlp"], h)
+        else:
+            h = layers.apply_mlp(cfg, p["mlp"], h)
+        x = x + h
+    return x, state
+
+
+def prefill(cfg: ModelConfig, params: dict, *, tokens=None, memory=None,
+            embeddings=None, context_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that also builds the decode state.
+
+    Returns (logits [B,S,V], decode_state positioned at t = S).
+    """
+    if embeddings is not None:
+        x = embeddings.astype(layers.cdtype(cfg))
+    else:
+        x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = layers.add_conv_pos(cfg, params["embed"], x)
+    x = shard(x, "dp", None, None)
+    B, S = x.shape[:2]
+    context_len = context_len or S
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if memory is not None:
+        memory = memory.astype(x.dtype)
+
+    state: dict[str, Any] = {}
+    if "blocks" in params:
+        def body(h, blk_params):
+            blk_state = {}
+            for i, kind in enumerate(cfg.pattern):
+                h, s = _prefill_block(cfg, kind, blk_params[str(i)], h,
+                                      positions, memory, context_len,
+                                      cache_dtype)
+                blk_state[str(i)] = s
+            return h, blk_state
+        x, state["blocks"] = _repeat_blocks(body, x, params["blocks"])
+
+    if "tail" in params:
+        state["tail"] = {}
+        for i, kind in enumerate(cfg.remainder):
+            x, s = _prefill_block(cfg, kind, params["tail"][str(i)], x,
+                                  positions, memory, context_len, cache_dtype)
+            state["tail"][str(i)] = s
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.lm_logits(cfg, params["embed"], x)
+    return shard(logits, "dp", None, "tp"), state
+
+
+# ---------------------------------------------------------------------------
+# Decode: single-token step with per-layer state
+# ---------------------------------------------------------------------------
+
+def _block_state_spec(cfg: ModelConfig, kind: str, batch: int,
+                      context_len: int, dtype) -> dict:
+    if kind in (ATTN, SWA, LOCAL):
+        return attention.kv_cache_spec(cfg, batch, context_len, kind, dtype)
+    if kind == XATTN:
+        shape = (batch, cfg.frontend_tokens, cfg.num_kv_heads, cfg.head_dim)
+        return {"k_mem": jax.ShapeDtypeStruct(shape, dtype),
+                "v_mem": jax.ShapeDtypeStruct(shape, dtype)}
+    if kind == RGLRU:
+        return rglru.rglru_state_spec(cfg, batch)
+    if kind == MAMBA:
+        return ssm.mamba_state_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def decode_state_spec(cfg: ModelConfig, batch: int, context_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Abstract decode-state tree matching decode_step's expectations."""
+    def stack(spec_fn):
+        one = spec_fn()
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_repeats,) + s.shape,
+                                           s.dtype), one)
+
+    state: dict[str, Any] = {}
+    if cfg.num_repeats:
+        state["blocks"] = {
+            str(i): stack(functools.partial(
+                _block_state_spec, cfg, kind, batch, context_len, dtype))
+            for i, kind in enumerate(cfg.pattern)}
+    if cfg.remainder:
+        state["tail"] = {
+            str(i): _block_state_spec(cfg, kind, batch, context_len, dtype)
+            for i, kind in enumerate(cfg.remainder)}
+    return state
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, context_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    spec = decode_state_spec(cfg, batch, context_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                  state: dict, t: jax.Array):
+    h = layers.apply_norm(cfg, p["norm"], x)
+    if kind in (ATTN, SWA, LOCAL):
+        h, state = attention.decode_attention(cfg, p["attn"], h, state, t, kind)
+    elif kind == XATTN:
+        # Cross K/V are precomputed once (prefill); just attend.
+        q, _, _ = attention._project_qkv(cfg, p["attn"], h, h[:, :1])
+        B = x.shape[0]
+        Sk = state["k_mem"].shape[1]
+        bias = jnp.zeros((B, 1, 1, Sk), jnp.float32)
+        out = attention._sdpa_grouped(cfg, q, state["k_mem"].astype(q.dtype),
+                                      state["v_mem"].astype(q.dtype), bias)
+        out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+        h = layers.apply_linear(p["attn"]["wo"], out)
+    elif kind == RGLRU:
+        h, state = rglru.apply_rglru_block(cfg, p["rglru"], h, state)
+    elif kind == MAMBA:
+        h, state = ssm.apply_mamba_block(cfg, p["mamba"], h, state)
+    x = x + h
+    if kind != MAMBA:
+        h = layers.apply_norm(cfg, p["mlp_norm"], x)
+        if cfg.num_experts:
+            h, _ = moe.apply_moe(cfg, p["mlp"], h)
+        else:
+            h = layers.apply_mlp(cfg, p["mlp"], h)
+        x = x + h
+    return x, state
+
+
+def decode_step(cfg: ModelConfig, params: dict, state: dict,
+                tokens: jax.Array, t: jax.Array):
+    """One decode step. tokens [B,1] int32; t = absolute position (scalar).
+
+    Returns (logits [B,1,V], new_state).
+    """
+    x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = shard(x, "dp", None, None)
+    new_state: dict[str, Any] = {}
+
+    if "blocks" in params:
+        def body(h, inputs):
+            blk_params, blk_state = inputs
+            new_blk_state = {}
+            for i, kind in enumerate(cfg.pattern):
+                h, s = _decode_block(cfg, kind, blk_params[str(i)], h,
+                                     blk_state[str(i)], t)
+                new_blk_state[str(i)] = s
+            return h, new_blk_state
+        x, new_state["blocks"] = _repeat_blocks(
+            body, x, params["blocks"], extra=state["blocks"])
+
+    if "tail" in params:
+        new_state["tail"] = {}
+        for i, kind in enumerate(cfg.remainder):
+            x, s = _decode_block(cfg, kind, params["tail"][str(i)], x,
+                                 state["tail"][str(i)], t)
+            new_state["tail"][str(i)] = s
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.lm_logits(cfg, params["embed"], x)
+    return shard(logits, "dp", None, "tp"), new_state

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the TARGET platform; container runs CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link (~50 GB/s); single-link basis
+
+CHIPS_PER_POD = 256
+HBM_BYTES = 16 * 1024**3      # 16 GiB per chip

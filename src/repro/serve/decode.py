@@ -1,0 +1,69 @@
+"""Serving steps: prefill and single-token decode with greedy/temperature
+sampling. ``make_serve_step`` is what the dry-run lowers for the
+``decode_32k`` / ``long_500k`` shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def sample_from_logits(logits: jax.Array, key: Optional[jax.Array],
+                       temperature: float = 0.0) -> jax.Array:
+    """logits [B,1,V] -> tokens [B,1]."""
+    if temperature and key is not None:
+        noise = jax.random.gumbel(key, logits.shape, jnp.float32)
+        logits = logits.astype(jnp.float32) / temperature + noise
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    """(params, state, tokens [B,1], t) -> (next_tokens [B,1], new_state)."""
+
+    def serve_step(params, state, tokens, t, key=None):
+        logits, state = transformer.decode_step(cfg, params, state, tokens, t)
+        nxt = sample_from_logits(logits, key, temperature)
+        return nxt, state
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, context_len: Optional[int] = None):
+    def prefill_step(params, tokens, memory=None, embeddings=None):
+        return transformer.prefill(
+            cfg, params, tokens=tokens, memory=memory, embeddings=embeddings,
+            context_len=context_len)
+    return prefill_step
+
+
+def generate(cfg: ModelConfig, params, prompt: jax.Array, max_new: int,
+             context_len: Optional[int] = None, temperature: float = 0.0,
+             key: Optional[jax.Array] = None, memory=None):
+    """Convenience loop for examples/tests: prefill + greedy decode.
+
+    prompt [B, S] -> tokens [B, S + max_new].
+    """
+    B, S = prompt.shape
+    context_len = context_len or (S + max_new)
+    logits, state = transformer.prefill(cfg, params, tokens=prompt,
+                                        memory=memory,
+                                        context_len=context_len)
+    last = sample_from_logits(logits[:, -1:], key, temperature)
+    step = jax.jit(make_serve_step(cfg, temperature))
+    out = [prompt, last]
+    tok = last
+    for i in range(max_new - 1):
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        tok, state = step(params, state, tok, jnp.int32(S + i), sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,8 @@
+from repro.sharding.ctx import (ShardingCtx, current_ctx, get_mesh, shard,
+                                use_sharding)
+from repro.sharding.rules import batch_spec, param_sharding, spec_for_path
+
+__all__ = [
+    "ShardingCtx", "use_sharding", "current_ctx", "shard", "get_mesh",
+    "param_sharding", "spec_for_path", "batch_spec",
+]

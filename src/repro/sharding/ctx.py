@@ -1,0 +1,80 @@
+"""Activation-sharding context.
+
+Model code calls ``shard(x, 'dp', None, 'tp')`` at layer boundaries; the
+logical axes are resolved against the active mesh (``'dp'`` expands to the
+data-parallel axes — ``('pod','data')`` on the multi-pod mesh — and
+``'tp'`` to the tensor-parallel axis). Outside any context (smoke tests,
+examples on one CPU device) it is a no-op, so the same model code runs
+everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_local = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    # Logical -> physical axis names.
+    dp: tuple[str, ...] = ("data",)    # batch / fsdp axes
+    tp: tuple[str, ...] = ("model",)   # tensor-parallel axes
+
+    def resolve(self, logical) -> Optional[tuple[str, ...]]:
+        if logical is None:
+            return None
+        if logical == "dp":
+            out = tuple(a for a in self.dp if a in self.mesh.axis_names)
+        elif logical == "tp":
+            out = tuple(a for a in self.tp if a in self.mesh.axis_names)
+        else:
+            raise ValueError(f"unknown logical axis {logical!r}")
+        return out or None
+
+    def pspec(self, *logical) -> P:
+        return P(*[self.resolve(l) for l in logical])
+
+    def sharding(self, *logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_local, "ctx", None)
+
+
+def get_mesh() -> Optional[Mesh]:
+    ctx = current_ctx()
+    return ctx.mesh if ctx else None
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = ctx
+    try:
+        yield
+    finally:
+        _local.ctx = prev
+
+
+def shard(x, *logical):
+    """with_sharding_constraint against the active mesh; no-op without one.
+
+    Axes that don't divide the corresponding dim are dropped (right-to-left)
+    so the same model code serves every cell — e.g. batch=1 long-context
+    decode simply stays replicated on the DP axes.
+    """
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    from repro.sharding.rules import fit_spec  # local: avoid import cycle
+    spec = fit_spec(ctx.mesh, x.shape, [ctx.resolve(l) for l in logical])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

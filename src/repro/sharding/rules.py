@@ -1,0 +1,160 @@
+"""Parameter/optimizer/batch sharding rules.
+
+Scheme (single pod 16×16, axes ``("data","model")``):
+
+  * 2-D weight sharding = FSDP('data') × TP('model'): column-parallel
+    projections ``P('data','model')``, row-parallel ``P('model','data')``
+    (Megatron layout + ZeRO-3-style weight sharding; XLA inserts the
+    all-gathers at use and reduce-scatters for the grads).
+  * Embedding: vocab-sharded rows over the FSDP axis (masked gather +
+    all-reduce lookup); tied head resharded once per step in lm_logits.
+  * MoE experts: ``P(None,'data','model')`` — expert dim replicated,
+    2-D sharding inside each expert.
+  * Multi-pod ``("pod","data","model")``: the pod axis is pure DP —
+    params replicated across pods (no cross-DCN weight all-gathers on the
+    critical path), gradients all-reduced over it.
+
+Every rule is divisibility-checked against the actual dim; axes that don't
+divide are dropped right-to-left, so tiny smoke configs simply replicate.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, entry: Axis) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh.shape[entry]
+    n = 1
+    for a in entry:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, entry: Axis) -> Axis:
+    """Drop axes (right to left) until the dim divides the axis product.
+    Axes the mesh doesn't have (e.g. 'model' on a DP-only example mesh)
+    are ignored."""
+    if entry is None:
+        return None
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if n > 1 and dim % n == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[:-1]
+    return None
+
+
+def fit_spec(mesh: Mesh, shape: Sequence[int], spec: Sequence[Axis]) -> P:
+    assert len(shape) == len(spec), (shape, spec)
+    return P(*[_fit(mesh, d, e) for d, e in zip(shape, spec)])
+
+
+# (regex, spec builder taking ndim-agnostic core dims). Specs are for the
+# *unstacked* tensor; a leading scan/stack dim gets None prepended.
+_RULES: list[tuple[str, tuple[Axis, ...]]] = [
+    # embeddings / head. The token table is vocab-(row-)sharded over the
+    # FSDP axis — XLA partitions the lookup via masked-gather + all-reduce;
+    # the tied-head reshard to P('model', None) happens explicitly in
+    # layers.lm_logits so logits come out vocab-sharded from a local matmul.
+    (r"embed/tokens$",             ("data", None)),
+    (r"embed/head/kernel$",        ("data", "model")),
+    (r"embed/conv_pos$",           (None, None, ("data", "model"))),
+    # attention
+    (r"attn/w[qkv]/kernel$",       ("data", "model")),
+    (r"attn/w[qkv]/bias$",         ("model",)),
+    (r"attn/wo/kernel$",           ("model", "data")),
+    (r"attn/wo/bias$",             (None,)),
+    # dense mlp
+    (r"mlp/w_(gate|up)/kernel$",   ("data", "model")),
+    (r"mlp/w_(gate|up)/bias$",     ("model",)),
+    (r"mlp/w_down/kernel$",        ("model", "data")),
+    (r"mlp/w_down/bias$",          (None,)),
+    # moe
+    (r"mlp/router/kernel$",        ("data", None)),
+    (r"mlp/router/bias$",          (None,)),
+    (r"mlp/w_(gate|up)$",          (None, "data", "model")),
+    (r"mlp/w_down$",               (None, "model", "data")),
+    # rg-lru
+    (r"rglru/in_(x|gate)/kernel$", ("data", "model")),
+    (r"rglru/in_(x|gate)/bias$",   ("model",)),
+    (r"rglru/out/kernel$",         ("model", "data")),
+    (r"rglru/out/bias$",           (None,)),
+    (r"rglru/conv1d$",             (None, "model")),
+    (r"rglru/gate_[ax]$",          (None, None, "model")),
+    (r"rglru/bias_[ax]$",          ("model",)),
+    (r"rglru/lam$",                ("model",)),
+    # mamba
+    (r"mamba/in_proj/kernel$",     ("data", "model")),
+    (r"mamba/in_proj/bias$",       ("model",)),
+    (r"mamba/conv1d$",             (None, "model")),
+    (r"mamba/conv_bias$",          ("model",)),
+    (r"mamba/x_proj/kernel$",      ("model", None)),
+    (r"mamba/dt_proj/kernel$",     (None, "model")),
+    (r"mamba/dt_proj/bias$",       ("model",)),
+    (r"mamba/A_log$",              ("model", None)),
+    (r"mamba/D$",                  ("model",)),
+    (r"mamba/out_proj/kernel$",    ("model", "data")),
+    (r"mamba/out_proj/bias$",      (None,)),
+    # norms & anything small: replicate (matched last)
+    (r".*",                        ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, shape: Sequence[int], mesh: Mesh) -> P:
+    # Stacked (scan-over-layers) tensors carry a leading repeat dim. This
+    # must also hold for optimizer moments, whose paths are m/blocks/...
+    # and v/blocks/... — missing those replicates the whole Adam state.
+    stacked = "blocks" in path_str.split("/")
+    for pattern, core in _RULES:
+        if re.search(pattern, path_str):
+            spec: tuple[Axis, ...] = tuple(core)
+            if not spec:  # replicate rule
+                spec = (None,) * len(shape)
+            elif stacked:
+                spec = (None,) + spec
+            if len(spec) != len(shape):
+                # Shape/rule mismatch (e.g. missing bias dims): replicate.
+                spec = (None,) * len(shape)
+            return fit_spec(mesh, shape, spec)
+    raise AssertionError("unreachable: catch-all rule")
+
+
+def param_sharding(params_tree, mesh: Mesh):
+    """Tree of NamedSharding matching an (abstract or concrete) param tree."""
+    def leaf(path, x):
+        return NamedSharding(mesh, spec_for_path(_path_str(path), x.shape, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_axis: int = 0) -> P:
+    """Batch inputs: leading dim over all DP axes (incl. 'pod')."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    entries: list[Axis] = [None] * ndim
+    entries[batch_axis] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)

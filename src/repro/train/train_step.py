@@ -1,0 +1,108 @@
+"""Training step factory: remat + microbatch accumulation + AdamW.
+
+``make_train_step`` builds a jit-able ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` for a given model/optimizer config.
+Microbatching runs under ``lax.scan`` accumulating fp32 grads so arbitrary
+global batches fit; remat policy controls the activation-memory/compute
+trade (hillclimbed per-cell in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+    num_microbatches: int = 1
+    remat: str = "full"            # none | full | dots
+    grad_accum_dtype: str = "float32"
+    resid_tp: bool = False         # shard saved residuals over TP (FSDP+SP)
+    # Unroll the microbatch loop in python instead of lax.scan. Production
+    # keeps scan (bounded HLO); the roofline probes unroll so per-microbatch
+    # weight gathers/reduce-scatters are visible to XLA cost analysis.
+    unroll_micro: bool = False
+
+
+def _remat_flag(policy: str) -> bool:
+    return policy != "none"
+
+
+def split_batch(batch: dict, num_micro: int) -> dict:
+    """[B, ...] -> [num_micro, B/num_micro, ...]."""
+    def f(x):
+        B = x.shape[0]
+        assert B % num_micro == 0, (B, num_micro)
+        return x.reshape(num_micro, B // num_micro, *x.shape[1:])
+    return jax.tree.map(f, batch)
+
+
+def make_loss_fn(model_cfg: ModelConfig, remat: str, resid_tp: bool = False):
+    use_remat = _remat_flag(remat)
+
+    def loss_fn(params, micro_batch):
+        return transformer.loss_fn(model_cfg, params, micro_batch,
+                                   remat=use_remat, resid_tp=resid_tp)
+    return loss_fn
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    loss_fn = make_loss_fn(model_cfg, train_cfg.remat, train_cfg.resid_tp)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    nm = train_cfg.num_microbatches
+    acc_dt = jnp.dtype(train_cfg.grad_accum_dtype)
+
+    def compute_grads(params, batch):
+        if nm == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+        micro = split_batch(batch, nm)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            (loss, _aux), g = grad_fn(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        if train_cfg.unroll_micro:
+            carry = (jnp.zeros((), jnp.float32), g0)
+            for i in range(nm):
+                carry, _ = body(carry, jax.tree.map(lambda x: x[i], micro))
+            loss_sum, grads = carry
+        else:
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0), micro)
+        grads = jax.tree.map(lambda g: (g / nm).astype(jnp.float32), grads)
+        loss = loss_sum / nm
+        return loss, {"ce": loss, "aux": jnp.zeros(())}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, aux, grads = compute_grads(params, batch)
+        params, opt_state, om = opt_lib.apply_updates(
+            train_cfg.optimizer, params, grads, opt_state)
+        metrics = {"loss": loss, **aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_train_state(model_cfg: ModelConfig, key):
+    params = transformer.init_params(model_cfg, key)
+    return params, opt_lib.init_opt_state(params)
+
+
+def train_state_shapes(model_cfg: ModelConfig):
+    """Abstract (params, opt_state) for the dry-run — no allocation."""
+    return jax.eval_shape(
+        functools.partial(make_train_state, model_cfg), jax.random.key(0))

@@ -1,0 +1,83 @@
+"""Courier RPC layer: gRPC server/client, futures, errors, serialization."""
+
+import numpy as np
+import pytest
+
+from repro.core import courier
+from repro.core.courier import serialization as ser
+from repro.core.courier.server import CourierServer
+
+
+class Service:
+    def __init__(self):
+        self.calls = 0
+
+    def add(self, a, b=0):
+        self.calls += 1
+        return a + b
+
+    def echo_array(self, x):
+        return x * 2
+
+    def boom(self):
+        raise ValueError("intentional")
+
+    def run(self):  # must NOT be exposed
+        raise AssertionError("run must not be callable remotely")
+
+    def _private(self):
+        return "secret"
+
+
+@pytest.fixture
+def served():
+    srv = CourierServer(Service())
+    srv.start()
+    yield courier.client_for(srv.endpoint)
+    srv.stop()
+
+
+def test_basic_call(served):
+    assert served.add(2, b=3) == 5
+
+
+def test_numpy_roundtrip(served):
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    np.testing.assert_array_equal(served.echo_array(x), x * 2)
+
+
+def test_jax_arrays_transport(served):
+    import jax.numpy as jnp
+    out = served.echo_array(jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((4,)))
+
+
+def test_futures(served):
+    futs = [served.futures.add(i, b=1) for i in range(8)]
+    assert [f.result(timeout=10) for f in futs] == list(range(1, 9))
+
+
+def test_remote_error_reraises(served):
+    with pytest.raises(courier.RemoteError, match="intentional"):
+        served.boom()
+
+
+def test_run_and_private_not_exposed(served):
+    with pytest.raises(courier.RemoteError):
+        served.run()          # server refuses to expose run()
+    with pytest.raises(AttributeError):
+        served._private()     # client refuses private names outright
+
+
+def test_inprocess_channel_matches_grpc_api():
+    courier.inprocess.register("svc", Service())
+    client = courier.client_for("inproc://svc")
+    assert client.add(1, b=2) == 3
+    assert client.futures.add(4, b=4).result(timeout=5) == 8
+
+
+def test_serialization_roundtrip_nested():
+    obj = {"a": [1, (2.5, "x")], "b": np.ones((2, 2))}
+    out = ser.loads(ser.dumps(obj))
+    assert out["a"][0] == 1 and out["a"][1][1] == "x"
+    np.testing.assert_array_equal(out["b"], np.ones((2, 2)))

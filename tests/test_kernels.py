@@ -1,0 +1,193 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode).
+
+Brief requirement: "For each Pallas kernel, sweep shapes/dtypes and
+assert_allclose against the ref.py pure-jnp oracle."
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, KV, dh, causal, window
+    (2, 128, 128, 4, 2, 64, True, None),
+    (1, 256, 256, 4, 4, 64, True, 64),
+    (2, 128, 256, 4, 1, 64, True, None),      # Sq < Sk (right-aligned)
+    (1, 128, 128, 2, 2, 32, False, None),     # encoder / bidirectional
+    (1, 512, 512, 8, 2, 128, True, 128),      # GQA + window
+    (3, 64, 64, 2, 1, 128, True, None),       # MQA
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Sq, Sk, H, KV, dh, causal, window = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_invariance():
+    B, S, H, KV, dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+    outs = [np.asarray(ops.flash_attention(q, k, v, block_q=bq, block_k=bk,
+                                           interpret=True))
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 4, 2, 64, 512),
+    (1, 8, 1, 128, 1024),
+    (3, 4, 4, 32, 512),
+    (1, 16, 8, 128, 2048),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(case, dtype):
+    B, H, KV, dh, L = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, L, KV, dh), dtype)
+    v = jax.random.normal(ks[2], (B, L, KV, dh), dtype)
+    valid = jax.random.bernoulli(ks[3], 0.7, (B, L)).at[:, 0].set(True)
+    out = ops.decode_attention(q, k, v, valid, block_l=256, interpret=True)
+    expect = ref.decode_attention(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_ring_semantics_match_model():
+    """Kernel + ring-validity mask == the model's decode_attention maths."""
+    B, L, KV, dh, t = 2, 64, 2, 32, 100
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 4, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, KV, dh), jnp.float32)
+    idx = jnp.arange(L)
+    k_pos = t - jnp.mod(t - idx, L)
+    valid = (k_pos >= 0) & (k_pos <= t)
+    out = ops.decode_attention(q, k, v, jnp.broadcast_to(valid, (B, L)),
+                               block_l=32, interpret=True)
+    expect = ref.decode_attention(q, k, v, jnp.broadcast_to(valid, (B, L)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rg-lru scan
+# ---------------------------------------------------------------------------
+
+RGLRU_CASES = [(2, 512, 256), (1, 256, 128), (4, 128, 384)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_sweep(case, dtype):
+    B, S, W = case
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.8, 0.999).astype(dtype)
+    x = jax.random.normal(ks[1], (B, S, W), dtype)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    y, hl = ops.rglru_scan(a, x, h0, block_s=128, block_w=128, interpret=True)
+    ye, hle = ref.rglru_scan(a, x, h0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hle),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_rglru_matches_model_associative_scan():
+    """Kernel == the model's associative-scan implementation."""
+    from repro.models.rglru import rglru_scan as model_scan
+    from repro import configs
+    cfg = configs.get_reduced("recurrentgemma-2b")
+    B, S, W = 2, 128, 128
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.8, 0.999)
+    x = jax.random.normal(ks[1], (B, S, W), jnp.float32)
+    h0 = jnp.zeros((B, W), jnp.float32)
+    y_k, h_k = ops.rglru_scan(a, x, h0, interpret=True)
+    y_r, h_r = ref.rglru_scan(a, x, h0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+SSM_CASES = [(2, 256, 256, 16), (1, 128, 128, 8), (2, 64, 384, 4)]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_sweep(case, dtype):
+    B, S, Di, N = case
+    ks = jax.random.split(KEY, 6)
+    u = jax.random.normal(ks[0], (B, S, Di), dtype)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N), dtype)
+    Cc = jax.random.normal(ks[4], (B, S, N), dtype)
+    D = jax.random.normal(ks[5], (Di,), jnp.float32)
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    y, hl = ops.ssm_scan(u, delta, A, Bc, Cc, D, h0, block_s=64,
+                         block_d=128, interpret=True)
+    ye, hle = ref.ssm_scan(u, delta, A, Bc, Cc, D, h0)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), **tol)
+
+
+def test_ssm_scan_chunk_boundary_state_carry():
+    """State must carry exactly across sequence-block boundaries."""
+    B, S, Di, N = 1, 128, 128, 8
+    ks = jax.random.split(KEY, 6)
+    u = jax.random.normal(ks[0], (B, S, Di), jnp.float32)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.5)
+    Bc = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    Cc = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    D = jnp.zeros((Di,), jnp.float32)
+    h0 = jax.random.normal(ks[5], (B, Di, N), jnp.float32)
+    outs = [np.asarray(ops.ssm_scan(u, delta, A, Bc, Cc, D, h0,
+                                    block_s=bs, block_d=64,
+                                    interpret=True)[0])
+            for bs in (32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)

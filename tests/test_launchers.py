@@ -1,0 +1,146 @@
+"""Launch/execution phases: thread + process launchers, restarts, stop."""
+
+import os
+import tempfile
+import time
+
+import pytest
+
+from repro import core as lp
+
+
+class Range:
+    def __init__(self, lo, hi):
+        self._lo, self._hi = lo, hi
+
+    def get(self):
+        return list(range(self._lo, self._hi))
+
+
+class SumConsumer:
+    def __init__(self, producers, out_path):
+        self._producers = producers
+        self._out = out_path
+
+    def run(self):
+        total = sum(sum(p.get()) for p in self._producers)
+        with open(self._out, "w") as f:
+            f.write(str(total))
+        lp.stop_program()
+
+
+def _producer_consumer(out_path):
+    p = lp.Program("pc")
+    with p.group("producer"):
+        h1 = p.add_node(lp.CourierNode(Range, 0, 10))
+        h2 = p.add_node(lp.CourierNode(Range, 10, 20))
+    with p.group("consumer"):
+        p.add_node(lp.CourierNode(SumConsumer, [h1, h2], out_path))
+    return p
+
+
+def _read(path):
+    with open(path) as f:
+        return int(f.read())
+
+
+def test_thread_launcher_inproc():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "out")
+        lp.launch_and_wait(_producer_consumer(out), timeout_s=20)
+        assert _read(out) == sum(range(20))
+
+
+def test_thread_launcher_grpc():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "out")
+        lp.launch_and_wait(_producer_consumer(out), timeout_s=30,
+                           force_grpc=True)
+        assert _read(out) == sum(range(20))
+
+
+def test_process_launcher():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "out")
+        launcher = lp.ProcessLauncher()
+        launcher.launch(_producer_consumer(out))
+        assert launcher.wait(timeout=60)
+        assert _read(out) == sum(range(20))
+
+
+class FlakyOnce:
+    def __init__(self, marker):
+        self._marker = marker
+
+    def run(self):
+        if not os.path.exists(self._marker):
+            open(self._marker, "w").close()
+            raise RuntimeError("first attempt crashes")
+        lp.stop_program()
+
+
+def test_thread_restart_policy_recovers():
+    with tempfile.TemporaryDirectory() as d:
+        p = lp.Program("flaky")
+        p.add_node(lp.PyNode(FlakyOnce, os.path.join(d, "m")))
+        launcher = lp.ThreadLauncher(
+            restart_policy=lp.RestartPolicy(max_restarts=2, backoff_s=0.01))
+        launcher.launch(p)
+        assert launcher.wait(timeout=20)
+        assert len(launcher.failures) == 1
+        assert not launcher.failures[0].fatal
+
+
+def test_process_restart_policy_recovers():
+    with tempfile.TemporaryDirectory() as d:
+        p = lp.Program("flaky")
+        p.add_node(lp.PyNode(FlakyOnce, os.path.join(d, "m")))
+        launcher = lp.ProcessLauncher(
+            restart_policy=lp.RestartPolicy(max_restarts=2, backoff_s=0.01))
+        launcher.launch(p)
+        assert launcher.wait(timeout=60)
+        assert len(launcher.failures) == 1 and not launcher.failures[0].fatal
+
+
+class AlwaysDies:
+    def run(self):
+        raise RuntimeError("nope")
+
+
+def test_fatal_after_budget_stops_program():
+    p = lp.Program("dead")
+    p.add_node(lp.PyNode(AlwaysDies))
+    launcher = lp.ThreadLauncher(
+        restart_policy=lp.RestartPolicy(max_restarts=1, backoff_s=0.01))
+    launcher.launch(p)
+    assert launcher.wait(timeout=20)
+    assert any(f.fatal for f in launcher.failures)
+
+
+def test_test_launcher_raises_on_fatal():
+    p = lp.Program("dead")
+    p.add_node(lp.PyNode(AlwaysDies))
+    with pytest.raises(lp.ProgramTestError):
+        lp.launch_and_wait(p, timeout_s=20)
+
+
+class Waits:
+    def run(self):
+        lp.get_current_context().wait_for_stop(30)
+
+
+def test_stop_propagates_to_waiting_services():
+    p = lp.Program("w")
+    p.add_node(lp.PyNode(Waits))
+    launcher = lp.ThreadLauncher()
+    launcher.launch(p)
+    time.sleep(0.1)
+    launcher.stop()
+    assert launcher.wait(timeout=10)
+
+
+def test_resources_for_unknown_group_rejected():
+    p = lp.Program("t")
+    p.add_node(lp.PyNode(Waits))
+    with pytest.raises(ValueError, match="unknown groups"):
+        lp.ThreadLauncher().launch(p, resources={"nope": {}})

@@ -1,0 +1,153 @@
+"""Service types: CacherNode, ColocationNode, ReverbNode, MeshWorkerNode,
+hedged fan-out."""
+
+import threading
+import time
+
+import pytest
+
+from repro import core as lp
+from repro.data.replay import TableConfig
+
+
+class Counter:
+    def __init__(self):
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def value(self):
+        with self._lock:
+            self._n += 1
+            return self._n
+
+
+class CacheProbe:
+    """Constructor args are SERIALIZED (deferred construction), so results
+    are asserted inside the service — a failure crashes the node, which the
+    test launcher reports as fatal."""
+
+    def __init__(self, cached):
+        self._cached = cached
+
+    def run(self):
+        vals = [self._cached.value() for _ in range(20)]
+        # One origin hit; 19 served from cache.
+        assert vals == [1] * 20, vals
+        stats = self._cached.cache_stats()
+        assert stats["misses"] == 1 and stats["hits"] >= 19, stats
+        lp.stop_program()
+
+
+def test_cacher_collapses_requests():
+    p = lp.Program("c")
+    origin = p.add_node(lp.CourierNode(Counter))
+    cached = p.add_node(lp.CacherNode(origin, timeout_s=30.0))
+    p.add_node(lp.CourierNode(CacheProbe, cached))
+    lp.launch_and_wait(p, timeout_s=20)
+
+
+def test_cacher_expires():
+    from repro.core.nodes.cacher import Cacher
+    origin = Counter()
+    c = Cacher(origin, timeout_s=0.05)
+    assert c.value() == 1
+    assert c.value() == 1
+    time.sleep(0.08)
+    assert c.value() == 2
+    stats = c.cache_stats()
+    assert stats["misses"] == 2 and stats["hits"] == 1
+
+
+def test_colocation_runs_wrapped_nodes_inproc():
+    done = []
+
+    class A:
+        def ping(self):
+            return "a"
+
+    class B:
+        def __init__(self, a):
+            self._a = a
+
+        def run(self):
+            done.append(self._a.ping())
+            lp.stop_program()
+
+    p = lp.Program("co")
+    na = lp.CourierNode(A)
+    ha = na.create_handle()
+    nb = lp.CourierNode(B, ha)
+    p.add_node(lp.ColocationNode(na, nb))
+    lp.launch_and_wait(p, timeout_s=20)
+    assert done == ["a"]
+
+
+class ReplayWriter:
+    def __init__(self, replay):
+        self._replay = replay
+
+    def run(self):
+        for i in range(10):
+            assert self._replay.insert("t", {"step": i})
+        lp.stop_program()
+
+
+def test_reverb_node_serves_replay():
+    p = lp.Program("rb")
+    replay = p.add_node(lp.ReverbNode([TableConfig("t", max_size=100)]))
+    p.add_node(lp.CourierNode(ReplayWriter, replay))
+    launcher = lp.launch_and_wait(p, timeout_s=20)
+    del launcher
+
+
+def test_mesh_worker_node_gets_mesh():
+    got = {}
+
+    class Learner:
+        def __init__(self, mesh=None):
+            got["mesh"] = mesh
+
+        def run(self):
+            lp.stop_program()
+
+    p = lp.Program("mesh")
+    with p.group("learner"):
+        p.add_node(lp.MeshWorkerNode(Learner))
+    lp.launch_and_wait(
+        p, resources={"learner": {"mesh": (1, 1), "axes": ("data", "model")}},
+        timeout_s=30)
+    mesh = got["mesh"]
+    assert mesh is not None and mesh.axis_names == ("data", "model")
+
+
+def test_mesh_worker_rejects_oversized_mesh():
+    class Learner:
+        def __init__(self, mesh=None):
+            pass
+
+    p = lp.Program("mesh2")
+    with p.group("learner"):
+        p.add_node(lp.MeshWorkerNode(Learner))
+    with pytest.raises(lp.ProgramTestError):
+        lp.launch_and_wait(
+            p, resources={"learner": {"mesh": (4096,), "axes": ("data",)}},
+            timeout_s=30)
+
+
+def test_hedged_map_quorum_and_hedging():
+    from concurrent import futures as cf
+    pool = cf.ThreadPoolExecutor(8)
+
+    def slow(i):
+        def call():
+            def work():
+                time.sleep(2.0 if i == 0 else 0.05)
+                return i
+            return pool.submit(work)
+        return call
+
+    t0 = time.monotonic()
+    res = lp.hedged_map([slow(i) for i in range(4)], quorum=3)
+    assert time.monotonic() - t0 < 1.5
+    assert res.count(None) >= 1  # the straggler was abandoned
+    assert set(x for x in res if x is not None) <= {0, 1, 2, 3}
