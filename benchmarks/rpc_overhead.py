@@ -1,7 +1,9 @@
 """Paper §1 claim: "Launchpad adds no additional overhead — communication
 between individual services will be just as fast as the underlying
 communication protocol." Measured: direct python call vs in-process
-courier channel vs courier-over-gRPC, same payloads.
+courier channel vs courier-over-gRPC, with a payload sweep (1 KiB ->
+8 MiB), the pre-refactor ("legacy") wire format as the A/B baseline over
+the same server, and batched RPC amortization.
 """
 
 from __future__ import annotations
@@ -11,6 +13,7 @@ import time
 import numpy as np
 
 from repro.core import courier
+from repro.core.courier.client import CourierClient
 from repro.core.courier.server import CourierServer
 
 
@@ -22,31 +25,106 @@ class Echo:
         return x
 
 
-def _time_call(fn, n: int) -> float:
+# (label, payload bytes, iterations) — fewer iterations as payloads grow.
+PAYLOADS = [
+    ("1k", 1024, 300),
+    ("64k", 64 * 1024, 200),
+    ("1m", 1 << 20, 160),
+    ("8m", 8 << 20, 24),
+]
+
+
+def _time_call(fn, n: int, repeats: int = 8) -> float:
+    """us/call, min over ``repeats`` chunks (robust to scheduler noise)."""
     fn()  # warmup
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) / n * 1e6  # us
+    chunk = max(1, n // repeats)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(chunk):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / chunk)
+    return best * 1e6
+
+
+def _sweep(emit, prefix: str, call, derived_first: str = "") -> None:
+    for label, size, n in PAYLOADS:
+        payload = np.zeros(size, np.uint8)
+        emit(f"{prefix}/echo{label}",
+             _time_call(lambda p=payload: call(p), n),
+             derived_first if label == PAYLOADS[0][0] else "")
+
+
+def _ab_sweep(emit, framed_call, legacy_call) -> None:
+    """Paired A/B: alternate framed/legacy chunks per payload so both see
+    the same background conditions (sequential sweeps drift apart on noisy
+    shared hosts)."""
+    for label, size, n in PAYLOADS:
+        payload = np.zeros(size, np.uint8)
+        chunk = max(1, n // 8)
+        framed_call(payload)
+        legacy_call(payload)  # warm both paths
+        best = {"frames": float("inf"), "legacy": float("inf")}
+        for _ in range(8):
+            for key, call in (("frames", framed_call), ("legacy", legacy_call)):
+                t0 = time.perf_counter()
+                for _ in range(chunk):
+                    call(payload)
+                best[key] = min(best[key],
+                                (time.perf_counter() - t0) / chunk)
+        emit(f"rpc/grpc/echo{label}", best["frames"] * 1e6, "")
+        emit(f"rpc/grpc_legacy/echo{label}", best["legacy"] * 1e6, "")
+
+
+def _ser_sweep(emit) -> None:
+    """Wire-format cost in isolation (no gRPC): encode + decode per format."""
+    from repro.core.courier import serialization as ser
+    for label, size, _ in PAYLOADS[-2:]:  # 1 MiB and 8 MiB
+        msg = ("echo", (np.zeros(size, np.uint8),), {})
+        framed, legacy = ser.dumps(msg), ser.legacy_dumps(msg)
+        emit(f"ser/frames/enc{label}", _time_call(lambda: ser.dumps(msg), 64),
+             "out-of-band buffers")
+        emit(f"ser/legacy/enc{label}",
+             _time_call(lambda: ser.legacy_dumps(msg), 64), "in-band pickle")
+        emit(f"ser/frames/dec{label}", _time_call(lambda: ser.loads(framed), 64),
+             "zero-copy views")
+        emit(f"ser/legacy/dec{label}", _time_call(lambda: ser.loads(legacy), 64),
+             "")
 
 
 def run(emit):
     obj = Echo()
-    payload = np.zeros(64 * 1024, np.uint8)   # 64 KiB
-    n = 300
+    n_ping = 300
 
-    emit("rpc/direct/ping", _time_call(obj.ping, n), "baseline")
-    emit("rpc/direct/echo64k", _time_call(lambda: obj.echo(payload), n), "")
+    emit("rpc/direct/ping", _time_call(obj.ping, n_ping), "baseline")
+    _sweep(emit, "rpc/direct", obj.echo)
 
     courier.inprocess.register("echo_bench", obj)
-    cli = courier.client_for("inproc://echo_bench")
-    emit("rpc/inproc/ping", _time_call(cli.ping, n), "shared-memory channel")
-    emit("rpc/inproc/echo64k", _time_call(lambda: cli.echo(payload), n), "")
+    with courier.client_for("inproc://echo_bench") as cli:
+        emit("rpc/inproc/ping", _time_call(cli.ping, n_ping),
+             "shared-memory channel")
+        _sweep(emit, "rpc/inproc", cli.echo)
     courier.inprocess.unregister("echo_bench")
 
     srv = CourierServer(obj)
     srv.start()
-    g = courier.client_for(srv.endpoint)
-    emit("rpc/grpc/ping", _time_call(g.ping, n), "courier-over-grpc")
-    emit("rpc/grpc/echo64k", _time_call(lambda: g.echo(payload), n), "")
-    srv.stop()
+    try:
+        # Framed (new) vs pre-refactor wire format over the SAME server (it
+        # mirrors the request's format): the A/B for the zero-copy win.
+        with courier.client_for(srv.endpoint) as g, \
+                CourierClient(srv.endpoint, wire_format="legacy") as gl:
+            emit("rpc/grpc/ping", _time_call(g.ping, n_ping),
+                 "courier-over-grpc framed wire format")
+            emit("rpc/grpc_legacy/ping", _time_call(gl.ping, n_ping),
+                 "pre-refactor wire format")
+            _ab_sweep(emit, g.echo, gl.echo)
+            # Batched RPC: 64 pings in one frame vs 64 single round trips.
+            batch = [("ping", (), {})] * 64
+            us_batch = _time_call(lambda: g.batch_call(batch), 50) / 64
+            emit("rpc/grpc/ping_batched64", us_batch,
+                 "per-call cost at 64 calls/frame")
+    finally:
+        srv.stop()
+        srv.stop()  # idempotent double-stop (exercised on purpose)
+
+    _ser_sweep(emit)

@@ -1,8 +1,11 @@
 """Benchmark driver: one module per paper table/figure + system substrate.
 
-    PYTHONPATH=src python -m benchmarks.run [--only param_server,...]
+    PYTHONPATH=src python -m benchmarks.run [--only param_server,...] \
+        [--json OUT.json]
 
-Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+Prints ``name,us_per_call,derived`` CSV (one row per measurement), and
+with ``--json`` also writes the rows to a JSON file (e.g. BENCH_rpc.json
+for the rpc_overhead suite — CI records these):
   * param_server  — paper Figure 2 (QPS: single vs replicated vs cached)
   * rpc_overhead  — paper §1 zero-overhead claim (direct vs inproc vs gRPC)
   * replay        — reverb-lite insert/sample throughput + rate limiter
@@ -13,21 +16,29 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 SUITES = ("rpc_overhead", "replay", "kernels", "param_server", "roofline")
 
+_rows: list[dict] = []
+
 
 def _emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+    _rows.append({"name": name, "us_per_call": round(us_per_call, 2),
+                  "derived": derived})
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows to a JSON file")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set(SUITES)
+    _rows.clear()
 
     print("name,us_per_call,derived")
     if "rpc_overhead" in only:
@@ -45,6 +56,13 @@ def main(argv=None) -> None:
     if "roofline" in only:
         from benchmarks import roofline_bench
         roofline_bench.run(_emit)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": sorted(only & set(SUITES)),
+                       "rows": _rows}, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(_rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

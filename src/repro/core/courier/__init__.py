@@ -1,32 +1,39 @@
-"""Courier: the RPC layer under Launchpad handles (paper §4, footnote 2)."""
+"""Courier: the RPC layer under Launchpad handles (paper §4, footnote 2).
+
+Layered as: ``CourierClient`` (proxy sugar) over a pluggable
+:class:`Transport` (``GrpcTransport`` / ``InProcTransport``) over the
+framed zero-copy wire format (``serialization``). See README.md here.
+"""
 
 from __future__ import annotations
-
-from typing import Any
 
 from repro.core.courier import inprocess
 from repro.core.courier.client import CourierClient
 from repro.core.courier.serialization import RemoteError
 from repro.core.courier.server import CourierServer
+from repro.core.courier.transport import (GrpcTransport, InProcTransport,
+                                          Transport, channel_pool_stats,
+                                          make_transport)
 
 
-def client_for(endpoint: str) -> Any:
-    """Build the most appropriate client for a resolved endpoint.
+def client_for(endpoint: str) -> CourierClient:
+    """Build the unified client over the most appropriate transport.
 
-    ``inproc://name`` -> shared-memory direct client (colocated services)
-    ``grpc://host:port`` -> courier-over-gRPC client
+    ``inproc://name`` -> shared-memory direct transport (colocated services)
+    ``grpc://host:port`` -> courier-over-gRPC on a pooled channel
     """
-    if endpoint.startswith("inproc://"):
-        return inprocess.InProcessClient(endpoint[len("inproc://"):])
-    if endpoint.startswith("grpc://"):
-        return CourierClient(endpoint)
-    raise ValueError(f"unknown courier endpoint scheme: {endpoint!r}")
+    return CourierClient(endpoint)
 
 
 __all__ = [
     "CourierClient",
     "CourierServer",
+    "GrpcTransport",
+    "InProcTransport",
     "RemoteError",
+    "Transport",
+    "channel_pool_stats",
     "client_for",
     "inprocess",
+    "make_transport",
 ]

@@ -1,109 +1,132 @@
-"""Courier client: RPC proxy whose attributes are remote methods (paper §4.1).
+"""Unified courier client: RPC proxy whose attributes are remote methods
+(paper §4.1).
 
 "from the perspective of any consuming class remote communication is
 invisible and it appears as if it is just using the original Python
-objects." Also exposes ``client.futures.method(...)`` returning a
-concurrent.futures.Future (used by the ES example, §5.3).
+objects." One client class serves every transport — gRPC or in-process —
+so the futures-proxy and method-proxy logic lives in exactly one place.
+
+API surface::
+
+    client = CourierClient("grpc://host:port")        # or "inproc://name"
+    client.method(*args, **kwargs)                    # blocking call
+    client.futures.method(*args, **kwargs)            # -> concurrent Future
+    client.batch_call([(m, args, kwargs), ...])       # N calls, one frame
+    client.futures.batch_call([...])                  # async batch
+    with CourierClient(ep) as c: ...                  # scoped channel use
 """
 
 from __future__ import annotations
 
-import threading
 from concurrent import futures as cf
-from typing import Any, Optional
-
-import grpc
+from typing import Any, Optional, Sequence
 
 from repro.core.courier import serialization as ser
-from repro.core.courier.server import COURIER_METHOD
-
-_GRPC_OPTIONS = [
-    ("grpc.max_send_message_length", -1),
-    ("grpc.max_receive_message_length", -1),
-]
+from repro.core.courier.transport import Call, Transport, make_transport
 
 
-class _GrpcFuture(cf.Future):
-    """Adapts a grpc future into a concurrent.futures.Future."""
-
-    @classmethod
-    def wrap(cls, grpc_future) -> "cf.Future":
-        out = cls()
-        out.set_running_or_notify_cancel()
-
-        def _done(gf):
-            try:
-                out.set_result(ser.decode_reply(gf.result()))
-            except BaseException as exc:  # noqa: BLE001
-                out.set_exception(exc)
-
-        grpc_future.add_done_callback(_done)
-        return out
+def _statuses_to_results(statuses: Sequence[tuple]) -> list:
+    """Unwrap batch statuses; error slots hold the exception instance."""
+    return [status[1] if status[0] == "ok"
+            else ser.status_to_exception(status)
+            for status in statuses]
 
 
 class _FuturesProxy:
-    def __init__(self, client: "CourierClient"):
-        self._client = client
+    """``client.futures.method(...)`` -> concurrent.futures.Future."""
+
+    def __init__(self, transport: Transport):
+        self._transport = transport
+
+    def batch_call(self, calls: Sequence[Call]) -> cf.Future:
+        """Async batch; resolves to per-call results in request order, with
+        exception instances occupying the slots of failed calls."""
+        inner = self._transport.batch_call_future(calls)
+        out: cf.Future = cf.Future()
+        out.set_running_or_notify_cancel()
+
+        def _done(f):
+            try:
+                out.set_result(_statuses_to_results(f.result()))
+            except BaseException as exc:  # noqa: BLE001
+                out.set_exception(exc)
+
+        inner.add_done_callback(_done)
+        return out
 
     def __getattr__(self, method: str):
+        if method.startswith("_"):
+            raise AttributeError(method)
+        transport = self._transport
+
         def call(*args, **kwargs) -> cf.Future:
-            payload = ser.encode_call(method, args, kwargs)
-            gf = self._client._callable.future(
-                payload, timeout=self._client._timeout,
-                wait_for_ready=True)
-            return _GrpcFuture.wrap(gf)
+            return transport.call_future(method, args, kwargs)
 
         return call
 
 
 class CourierClient:
-    """Client for a courier endpoint (``grpc://host:port``)."""
+    """Client for a courier endpoint, over whichever transport fits it.
 
-    def __init__(self, endpoint: str, timeout: Optional[float] = None):
-        if endpoint.startswith("grpc://"):
-            endpoint = endpoint[len("grpc://"):]
-        self._endpoint = endpoint
-        self._timeout = timeout
-        self._lock = threading.Lock()
-        self._channel: Optional[grpc.Channel] = None
-        self.__callable = None
+    ``grpc://host:port`` -> :class:`GrpcTransport` (pooled channel, framed
+    zero-copy wire format); ``inproc://name`` -> :class:`InProcTransport`
+    (direct invocation). Close (or use as a context manager) to release
+    the pooled channel; double-close is a no-op.
+    """
+
+    def __init__(self, endpoint: str, timeout: Optional[float] = None,
+                 wire_format: str = "frames",
+                 transport: Optional[Transport] = None):
+        self._transport = transport if transport is not None else \
+            make_transport(endpoint, timeout=timeout, wire_format=wire_format)
 
     @property
-    def _callable(self):
-        with self._lock:
-            if self.__callable is None:
-                self._channel = grpc.insecure_channel(
-                    self._endpoint, options=_GRPC_OPTIONS)
-                self.__callable = self._channel.unary_unary(
-                    COURIER_METHOD,
-                    request_serializer=None,
-                    response_deserializer=None)
-            return self.__callable
+    def endpoint(self) -> str:
+        return self._transport.endpoint
+
+    @property
+    def transport(self) -> Transport:
+        return self._transport
 
     @property
     def futures(self) -> _FuturesProxy:
-        return _FuturesProxy(self)
+        return _FuturesProxy(self._transport)
 
     def __getattr__(self, method: str):
-        if method.startswith("_") or method in ("futures",):
+        if method.startswith("_"):
             raise AttributeError(method)
+        transport = self._transport
 
         def call(*args, **kwargs):
-            payload = ser.encode_call(method, args, kwargs)
-            # wait_for_ready: don't fail calls issued before the server
-            # node finished binding (launch is asynchronous).
-            reply = self._callable(payload, timeout=self._timeout,
-                                   wait_for_ready=True)
-            return ser.decode_reply(reply)
+            return transport.call(method, args, kwargs)
 
         return call
 
+    # -- batched RPC ---------------------------------------------------------
+    def batch_call(self, calls: Sequence[Call],
+                   return_exceptions: bool = False) -> list[Any]:
+        """Execute ``calls`` — ``(method, args, kwargs)`` tuples — in one
+        round trip.
+
+        Results come back in request order. A failing call never aborts its
+        siblings server-side; client-side, the first error is raised unless
+        ``return_exceptions`` is set, in which case error slots hold the
+        exception instance instead.
+        """
+        statuses = self._transport.batch_call(calls)
+        if return_exceptions:
+            return _statuses_to_results(statuses)
+        return [ser.status_to_result(status) for status in statuses]
+
+    # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
-        with self._lock:
-            if self._channel is not None:
-                self._channel.close()
-                self._channel = None
-                self.__callable = None
+        self._transport.close()
+
+    def __enter__(self) -> "CourierClient":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
 
     def __repr__(self) -> str:
-        return f"CourierClient(grpc://{self._endpoint})"
+        return f"CourierClient({self.endpoint})"

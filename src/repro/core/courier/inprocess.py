@@ -1,18 +1,20 @@
-"""In-process courier channel (shared-memory fast path).
+"""In-process service registry (shared-memory fast path).
 
 Paper §4: "the Handle abstraction ... allows us to flexibly choose the most
 appropriate client type at launch phase (e.g., to use a shared-memory
 channel if the service is allocated on the same physical machine)."
 
 The thread launcher and ColocationNode resolve addresses to
-``inproc://<name>`` endpoints backed by this registry. Calls are direct
-method invocations (zero serialization), with ``.futures`` served from a
-shared thread pool, so the API is identical to the gRPC client.
+``inproc://<name>`` endpoints backed by this registry. The client side
+lives in :class:`repro.core.courier.transport.InProcTransport` (behind the
+unified ``CourierClient``); this module only owns the name -> object map
+and the shared thread pool that serves ``.futures`` calls.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from concurrent import futures
 from typing import Any, Optional
 
@@ -22,7 +24,7 @@ _pool: Optional[futures.ThreadPoolExecutor] = None
 _pool_lock = threading.Lock()
 
 
-def _shared_pool() -> futures.ThreadPoolExecutor:
+def shared_pool() -> futures.ThreadPoolExecutor:
     global _pool
     with _pool_lock:
         if _pool is None:
@@ -46,7 +48,6 @@ def unregister(name: str) -> None:
 def lookup(name: str, timeout_s: float = 10.0) -> Any:
     """Resolve a service, waiting for it to come up (launch is async:
     a client node may start before its server node has registered)."""
-    import time
     deadline = time.monotonic() + timeout_s
     while True:
         with _registry_lock:
@@ -66,40 +67,7 @@ def reset() -> None:
         _registry.clear()
 
 
-class _FuturesProxy:
-    def __init__(self, obj: Any):
-        self._obj = obj
-
-    def __getattr__(self, method: str):
-        fn = getattr(self._obj, method)
-        pool = _shared_pool()
-
-        def call(*args, **kwargs):
-            return pool.submit(fn, *args, **kwargs)
-
-        return call
-
-
-class InProcessClient:
-    """Courier client for a same-process service: direct calls + .futures."""
-
-    def __init__(self, name: str):
-        self._name = name
-        self._obj = None
-
-    def _target(self) -> Any:
-        if self._obj is None:
-            self._obj = lookup(self._name)
-        return self._obj
-
-    @property
-    def futures(self) -> _FuturesProxy:
-        return _FuturesProxy(self._target())
-
-    def __getattr__(self, method: str):
-        if method.startswith("_"):
-            raise AttributeError(method)
-        return getattr(self._target(), method)
-
-    def __repr__(self) -> str:
-        return f"InProcessClient({self._name!r})"
+def InProcessClient(name: str):
+    """Back-compat constructor: the unified client over InProcTransport."""
+    from repro.core.courier.client import CourierClient
+    return CourierClient(f"inproc://{name}")

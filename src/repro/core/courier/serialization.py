@@ -1,77 +1,267 @@
-"""Courier wire format.
+"""Courier wire format: length-prefixed frames with out-of-band buffers.
 
-cloudpickle (protocol 5) for arbitrary Python callables/classes — the paper
-notes CourierNode "serializes the class and any given argument, which are
-then shipped over network and deserialized at execution time". JAX arrays
-are converted to numpy before pickling (device buffers don't transport);
-they come back as numpy and re-device-put lazily on use.
+Layout of a framed message (all integers little-endian)::
+
+    MAGIC(2B) | nframes:u32 | len_0:u64 .. len_{n-1}:u64 | frame_0 | .. | frame_{n-1}
+
+``frame_0`` is a pickle protocol-5 stream produced with a
+``buffer_callback``; frames 1..n-1 are the raw out-of-band buffers
+(numpy / JAX array payloads) it references. Array payloads are therefore
+never copied into the pickle stream on encode, and on decode they are
+reconstructed as zero-copy views over the received message — received
+arrays are read-only; call ``np.copy`` before mutating in place.
+
+JAX arrays are reduced through numpy at pickling time (device buffers do
+not transport); they come back as numpy and re-device-put lazily on use.
+There is no pre-serialization deep-copy pass over the payload: container
+types (including NamedTuple subclasses) are preserved exactly as pickle
+sees them.
+
+A message that does not start with MAGIC is treated as a bare cloudpickle
+blob — the pre-frames legacy format, kept for wire compatibility and as
+the benchmark baseline (see ``legacy_dumps``). ``loads`` transparently
+decodes both.
 """
 
 from __future__ import annotations
 
 import io
 import pickle
+import struct
 import traceback
-from typing import Any
+from typing import Any, Sequence
 
 import cloudpickle
 import numpy as np
 
+MAGIC = b"\xc5\x01"  # 'courier frames', version 1
+_NFRAMES = struct.Struct("<I")
+_FRAMELEN = struct.Struct("<Q")
 
-def _to_transportable(obj: Any) -> Any:
-    """Recursively convert jax.Array leaves to numpy (cheap on CPU)."""
-    try:
-        import jax
-    except Exception:  # pragma: no cover - jax is a hard dep in this repo
-        return obj
-    if isinstance(obj, jax.Array):
-        return np.asarray(obj)
-    if isinstance(obj, (list, tuple)):
-        conv = [_to_transportable(v) for v in obj]
-        return tuple(conv) if isinstance(obj, tuple) else conv
-    if isinstance(obj, dict):
-        return {k: _to_transportable(v) for k, v in obj.items()}
-    return obj
-
-
-def dumps(obj: Any) -> bytes:
-    return cloudpickle.dumps(_to_transportable(obj), protocol=5)
-
-
-def loads(data: bytes) -> Any:
-    return pickle.loads(data)
+# Legacy (pre-frames) pickle streams start with the pickle PROTO opcode
+# (0x80), so MAGIC can never collide with them.
+assert MAGIC[0] != 0x80
 
 
 class RemoteError(RuntimeError):
     """An exception raised inside a remote service, re-raised client-side."""
 
 
+_JAX_ARRAY_TYPE: Any = False  # unresolved sentinel (None = jax unavailable)
+
+
+def _jax_array_type():
+    # Resolved once: reducer_override runs per pickled object, so the
+    # import-machinery probe must not sit on the encode hot path.
+    global _JAX_ARRAY_TYPE
+    if _JAX_ARRAY_TYPE is False:
+        try:
+            import jax
+            _JAX_ARRAY_TYPE = jax.Array
+        except Exception:  # pragma: no cover - jax is a hard dep in this repo
+            _JAX_ARRAY_TYPE = None
+    return _JAX_ARRAY_TYPE
+
+
+class _CourierPickler(cloudpickle.CloudPickler):
+    """cloudpickle plus device-array reduction.
+
+    JAX arrays are reduced through ``np.asarray`` so device buffers never
+    enter the stream; under protocol 5 numpy then emits the payload as an
+    out-of-band ``PickleBuffer`` which the frame encoder ships uncopied.
+    """
+
+    def reducer_override(self, obj):
+        jax_array = _jax_array_type()
+        if jax_array is not None and isinstance(obj, jax_array):
+            return np.asarray(obj).__reduce_ex__(5)
+        return super().reducer_override(obj)
+
+
+# ---- framed encode / decode -------------------------------------------------
+
+def dumps(obj: Any) -> bytes:
+    """Serialize ``obj`` into a framed message (out-of-band array buffers)."""
+    buffers: list[pickle.PickleBuffer] = []
+    stream = io.BytesIO()
+    _CourierPickler(stream, protocol=5, buffer_callback=buffers.append).dump(obj)
+    frames: list[Any] = [stream.getbuffer()]
+    for buf in buffers:
+        try:
+            frames.append(buf.raw())
+        except BufferError:  # non-contiguous exotic buffer: copy once
+            frames.append(memoryview(bytes(buf)))
+    parts: list[Any] = [MAGIC, _NFRAMES.pack(len(frames))]
+    parts.extend(_FRAMELEN.pack(f.nbytes) for f in frames)
+    parts.extend(frames)
+    return b"".join(parts)
+
+
+def is_framed(data: bytes) -> bool:
+    return len(data) >= 2 and bytes(data[:2]) == MAGIC
+
+
+def loads(data: bytes) -> Any:
+    """Deserialize a framed message; falls back to bare-pickle (legacy)."""
+    if not is_framed(data):
+        return pickle.loads(data)
+    mv = memoryview(data)
+    (nframes,) = _NFRAMES.unpack_from(mv, 2)
+    offset = 2 + _NFRAMES.size
+    lengths = []
+    for _ in range(nframes):
+        (n,) = _FRAMELEN.unpack_from(mv, offset)
+        lengths.append(n)
+        offset += _FRAMELEN.size
+    frames = []
+    for n in lengths:
+        frames.append(mv[offset:offset + n])
+        offset += n
+    # Buffers alias the received message: zero-copy, read-only arrays.
+    return pickle.loads(frames[0], buffers=frames[1:])
+
+
+# ---- legacy (pre-frames) encode ---------------------------------------------
+#
+# Frozen copy of the original wire format: a recursive deep-copy pass that
+# converts jax leaves to numpy, then one in-band cloudpickle blob. Kept so
+# mixed-version peers interoperate and so benchmarks/rpc_overhead.py can
+# measure the old format against the new one over the same server.
+
+def _legacy_to_transportable(obj: Any) -> Any:
+    jax_array = _jax_array_type()
+    if jax_array is not None and isinstance(obj, jax_array):
+        return np.asarray(obj)
+    if isinstance(obj, (list, tuple)):
+        conv = [_legacy_to_transportable(v) for v in obj]
+        if isinstance(obj, tuple):
+            # Preserve NamedTuple subclasses (the original code collapsed
+            # them to plain tuples).
+            return type(obj)(*conv) if hasattr(obj, "_fields") else tuple(conv)
+        return conv
+    if isinstance(obj, dict):
+        return {k: _legacy_to_transportable(v) for k, v in obj.items()}
+    return obj
+
+
+def legacy_dumps(obj: Any) -> bytes:
+    return cloudpickle.dumps(_legacy_to_transportable(obj), protocol=5)
+
+
+def _dumps(obj: Any, legacy: bool) -> bytes:
+    return legacy_dumps(obj) if legacy else dumps(obj)
+
+
 # ---- call / reply framing ---------------------------------------------------
 
-def encode_call(method: str, args: tuple, kwargs: dict) -> bytes:
-    return dumps((method, args, kwargs))
+def encode_call(method: str, args: tuple, kwargs: dict,
+                legacy: bool = False) -> bytes:
+    return _dumps((method, args, kwargs), legacy)
 
 
 def decode_call(data: bytes) -> tuple[str, tuple, dict]:
     return loads(data)
 
 
-def encode_reply_ok(value: Any) -> bytes:
-    return dumps(("ok", value))
+def encode_reply_ok(value: Any, legacy: bool = False) -> bytes:
+    return _dumps(("ok", value), legacy)
 
 
-def encode_reply_error(exc: BaseException) -> bytes:
+def _error_tuple(exc: BaseException) -> tuple:
     tb = "".join(traceback.format_exception(type(exc), exc, exc.__traceback__))
+    return ("err", exc, tb)
+
+
+def encode_reply_error(exc: BaseException, legacy: bool = False) -> bytes:
+    status = _error_tuple(exc)
     try:
-        payload = dumps(("err", exc, tb))
-    except Exception:
-        payload = dumps(("err", RemoteError(repr(exc)), tb))
-    return payload
+        return _dumps(status, legacy)
+    except Exception:  # unpicklable exception object
+        return _dumps(("err", RemoteError(repr(exc)), status[2]), legacy)
+
+
+def _raise_remote(status: tuple) -> None:
+    _, exc, tb = status
+    raise RemoteError(f"remote call failed:\n{tb}") from exc
 
 
 def decode_reply(data: bytes) -> Any:
     msg = loads(data)
     if msg[0] == "ok":
         return msg[1]
-    _, exc, tb = msg
-    raise RemoteError(f"remote call failed:\n{tb}") from exc
+    _raise_remote(msg)
+
+
+# ---- batch call / reply framing ---------------------------------------------
+#
+# A batch ships N calls in ONE framed message (one pickle stream, one set of
+# shared out-of-band buffers) and returns N per-call statuses in one reply.
+# Statuses preserve request order; a failing call never aborts its siblings.
+
+def encode_batch_call(calls: Sequence[tuple[str, tuple, dict]],
+                      legacy: bool = False) -> bytes:
+    return _dumps(("batch", list(calls)), legacy)
+
+
+def decode_batch_call(data: bytes) -> list[tuple[str, tuple, dict]]:
+    tag, calls = loads(data)
+    if tag != "batch":
+        raise ValueError(f"not a batch call message: {tag!r}")
+    return calls
+
+
+def encode_batch_reply(statuses: Sequence[tuple], legacy: bool = False) -> bytes:
+    statuses = list(statuses)
+    try:
+        # Fast path: one pickling pass over the whole batch.
+        return _dumps(("batch_reply", statuses), legacy)
+    except Exception:
+        pass
+    # Some status is unpicklable (an exotic exception, or an 'ok' value such
+    # as a lock/handle). Isolate per status so siblings still come back.
+    safe = []
+    for status in statuses:
+        try:
+            _dumps(status, legacy)
+            safe.append(status)
+        except Exception:
+            if status[0] == "ok":
+                safe.append(("err", RemoteError(
+                    f"result of type {type(status[1]).__name__} is not "
+                    "serializable"), ""))
+            else:
+                safe.append(("err", RemoteError(repr(status[1])), status[2]))
+    return _dumps(("batch_reply", safe), legacy)
+
+
+def make_ok_status(value: Any) -> tuple:
+    return ("ok", value)
+
+
+def make_error_status(exc: BaseException) -> tuple:
+    return _error_tuple(exc)
+
+
+def decode_batch_reply(data: bytes) -> list[tuple]:
+    msg = loads(data)
+    if msg[0] == "err":  # whole-batch failure (e.g. undecodable request)
+        _raise_remote(msg)
+    tag, statuses = msg
+    if tag != "batch_reply":
+        raise ValueError(f"not a batch reply message: {tag!r}")
+    return statuses
+
+
+def status_to_result(status: tuple) -> Any:
+    """Unwrap one batch status: return the value or raise RemoteError."""
+    if status[0] == "ok":
+        return status[1]
+    _raise_remote(status)
+
+
+def status_to_exception(status: tuple) -> RemoteError:
+    """Build (without raising) the client-side error for an 'err' status."""
+    _, exc, tb = status
+    err = RemoteError(f"remote call failed:\n{tb}")
+    err.__cause__ = exc
+    return err

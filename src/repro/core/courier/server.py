@@ -1,9 +1,12 @@
 """Courier server: expose an arbitrary Python object over gRPC (paper §4.1).
 
-We register a *generic* unary-unary handler at ``/courier/Call`` so no
-protoc-generated stubs are needed. Requests are
-``cloudpickle((method, args, kwargs))``; replies are ``("ok", value)`` or
-``("err", exc, traceback)``.
+We register *generic* unary-unary handlers at ``/courier/Call`` and
+``/courier/BatchCall`` so no protoc-generated stubs are needed. Requests
+are framed ``(method, args, kwargs)`` messages (serialization.py); replies
+are ``("ok", value)`` or ``("err", exc, traceback)`` statuses — a batch
+request carries N calls in one frame and gets N statuses back, in order.
+The server mirrors the request's wire format (framed vs. legacy bare
+pickle), so old-format clients keep working.
 
 Paper semantics implemented here:
   * all *public* methods of the wrapped object are exposed, except ``run``;
@@ -15,65 +18,89 @@ from __future__ import annotations
 
 import threading
 from concurrent import futures
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import grpc
 
 from repro.core.courier import serialization as ser
-
-_GRPC_OPTIONS = [
-    ("grpc.max_send_message_length", -1),
-    ("grpc.max_receive_message_length", -1),
-]
-
-COURIER_METHOD = "/courier/Call"
+from repro.core.courier.transport import (COURIER_BATCH_METHOD,
+                                          COURIER_METHOD, _GRPC_OPTIONS)
 
 
 class _GenericCourierHandler(grpc.GenericRpcHandler):
-    def __init__(self, handler):
-        self._handler = grpc.unary_unary_rpc_method_handler(
-            handler,
-            request_deserializer=None,   # raw bytes in
-            response_serializer=None,    # raw bytes out
-        )
+    def __init__(self, handlers: dict[str, Callable]):
+        self._handlers = {
+            method: grpc.unary_unary_rpc_method_handler(
+                fn,
+                request_deserializer=None,   # raw bytes in
+                response_serializer=None,    # raw bytes out
+            )
+            for method, fn in handlers.items()
+        }
 
     def service(self, handler_call_details):
-        if handler_call_details.method == COURIER_METHOD:
-            return self._handler
-        return None
+        return self._handlers.get(handler_call_details.method)
 
 
 class CourierServer:
-    """Serves the public methods of ``obj`` at a gRPC endpoint."""
+    """Serves the public methods of ``obj`` at a gRPC endpoint.
+
+    ``handler_init`` (optional) runs at the top of every RPC on the
+    handling thread — launchers use it to install the node's
+    :class:`WorkerContext` so service code can call ``lp.stop_program()``
+    from inside an RPC handler.
+    """
 
     def __init__(self, obj: Any, port: int = 0, host: str = "127.0.0.1",
-                 max_workers: int = 16):
+                 max_workers: int = 16,
+                 handler_init: Optional[Callable[[], None]] = None):
         self._obj = obj
-        self._lock = threading.Lock()  # guards lazy method lookup only
+        self._handler_init = handler_init
+        self._lock = threading.Lock()  # guards lifecycle transitions
         self._server = grpc.server(
             futures.ThreadPoolExecutor(max_workers=max_workers,
                                        thread_name_prefix="courier-srv"),
             options=_GRPC_OPTIONS)
         self._server.add_generic_rpc_handlers(
-            (_GenericCourierHandler(self._handle),))
+            (_GenericCourierHandler({
+                COURIER_METHOD: self._handle,
+                COURIER_BATCH_METHOD: self._handle_batch,
+            }),))
         self._port = self._server.add_insecure_port(f"{host}:{port}")
         if self._port == 0:
             raise RuntimeError(f"failed to bind courier server on {host}:{port}")
         self._host = host
         self._started = False
+        self._stopped = False
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
-        self._server.start()
-        self._started = True
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("CourierServer cannot restart after stop()")
+            if self._started:
+                return
+            self._server.start()
+            self._started = True
 
     def stop(self, grace: Optional[float] = 0.5) -> None:
-        if self._started:
-            self._server.stop(grace)
-            self._started = False
+        """Stop serving. Safe to call repeatedly or before start() (which
+        releases the port bound in __init__ either way)."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
+        self._server.stop(grace)
 
     def wait(self) -> None:
         self._server.wait_for_termination()
+
+    def __enter__(self) -> "CourierServer":
+        self.start()
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()
 
     @property
     def endpoint(self) -> str:
@@ -83,14 +110,39 @@ class CourierServer:
     def port(self) -> int:
         return self._port
 
-    # -- request handling -----------------------------------------------------
+    # -- request handling ----------------------------------------------------
+    def _invoke(self, method: str, args: tuple, kwargs: dict) -> Any:
+        if method.startswith("_") or method == "run":
+            raise AttributeError(
+                f"method {method!r} is not exposed over courier")
+        return getattr(self._obj, method)(*args, **kwargs)
+
     def _handle(self, request: bytes, context) -> bytes:
+        legacy = not ser.is_framed(request)
+        if self._handler_init is not None:
+            self._handler_init()
         try:
             method, args, kwargs = ser.decode_call(request)
-            if method.startswith("_") or method == "run":
-                raise AttributeError(
-                    f"method {method!r} is not exposed over courier")
-            fn = getattr(self._obj, method)
-            return ser.encode_reply_ok(fn(*args, **kwargs))
+            return ser.encode_reply_ok(self._invoke(method, args, kwargs),
+                                       legacy=legacy)
         except BaseException as exc:  # noqa: BLE001 - ship any failure back
-            return ser.encode_reply_error(exc)
+            return ser.encode_reply_error(exc, legacy=legacy)
+
+    def _handle_batch(self, request: bytes, context) -> bytes:
+        legacy = not ser.is_framed(request)
+        if self._handler_init is not None:
+            self._handler_init()
+        statuses = []
+        try:
+            calls = ser.decode_batch_call(request)
+        except BaseException as exc:  # noqa: BLE001 - undecodable batch
+            return ser.encode_reply_error(exc, legacy=legacy)
+        for method, args, kwargs in calls:
+            # Per-call isolation: one failing entry never aborts siblings,
+            # and statuses come back in request order.
+            try:
+                statuses.append(
+                    ser.make_ok_status(self._invoke(method, args, kwargs)))
+            except BaseException as exc:  # noqa: BLE001
+                statuses.append(ser.make_error_status(exc))
+        return ser.encode_batch_reply(statuses, legacy=legacy)

@@ -1,0 +1,286 @@
+"""Pluggable courier transports (paper §4.1).
+
+A :class:`Transport` moves one call — ``(method, args, kwargs)`` — or one
+batch of calls to a service and returns the result(s). The unified
+:class:`~repro.core.courier.client.CourierClient` owns all proxy sugar
+(attribute methods, ``.futures``, ``batch_call``) and delegates the actual
+movement here, so the gRPC and in-process paths no longer duplicate it.
+
+Implementations:
+
+``GrpcTransport``    framed wire format (serialization.py) over pooled
+                     gRPC channels. Channels are shared process-wide,
+                     keyed by ``host:port`` and refcounted: N clients to
+                     the same endpoint share one channel; the channel
+                     closes when the last client is closed.
+``InProcTransport``  direct method invocation against the in-process
+                     registry (zero serialization); ``.futures`` runs on a
+                     shared thread pool. Used when launch placed caller
+                     and service in the same process.
+"""
+
+from __future__ import annotations
+
+import abc
+import re
+import threading
+from concurrent import futures as cf
+from typing import Any, Callable, Optional, Sequence
+
+import grpc
+
+from repro.core.courier import inprocess
+from repro.core.courier import serialization as ser
+
+# One call: (method, args, kwargs). One status: ("ok", value) | ("err", ...).
+Call = tuple[str, tuple, dict]
+
+_GRPC_OPTIONS = [
+    ("grpc.max_send_message_length", -1),
+    ("grpc.max_receive_message_length", -1),
+]
+
+COURIER_METHOD = "/courier/Call"
+COURIER_BATCH_METHOD = "/courier/BatchCall"
+
+
+class Transport(abc.ABC):
+    """Moves calls to one service endpoint."""
+
+    endpoint: str
+
+    @abc.abstractmethod
+    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        """Execute one call synchronously; return its result or raise."""
+
+    @abc.abstractmethod
+    def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
+        """Execute one call asynchronously."""
+
+    @abc.abstractmethod
+    def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
+        """Execute N calls in one round trip; return N statuses in order."""
+
+    @abc.abstractmethod
+    def batch_call_future(self, calls: Sequence[Call]) -> cf.Future:
+        """Async :meth:`batch_call`; the future resolves to the status list."""
+
+    def close(self) -> None:  # noqa: B027 - optional hook
+        """Release transport resources. Idempotent."""
+
+
+# ---- gRPC channel pool ------------------------------------------------------
+
+class _ChannelPool:
+    """Process-wide refcounted channel cache keyed by ``host:port``.
+
+    gRPC channels are expensive (socket + HTTP/2 session + threads) and
+    fully thread-safe, so every transport to the same endpoint shares one.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict[str, tuple[grpc.Channel, int]] = {}
+
+    def acquire(self, target: str) -> grpc.Channel:
+        with self._lock:
+            entry = self._entries.get(target)
+            if entry is None:
+                channel = grpc.insecure_channel(target, options=_GRPC_OPTIONS)
+                self._entries[target] = (channel, 1)
+                return channel
+            channel, refs = entry
+            self._entries[target] = (channel, refs + 1)
+            return channel
+
+    def release(self, target: str) -> None:
+        with self._lock:
+            entry = self._entries.get(target)
+            if entry is None:
+                return
+            channel, refs = entry
+            if refs <= 1:
+                del self._entries[target]
+            else:
+                self._entries[target] = (channel, refs - 1)
+                return
+        channel.close()
+
+    def stats(self) -> dict[str, int]:
+        """target -> refcount (test/debug hook)."""
+        with self._lock:
+            return {t: refs for t, (_, refs) in self._entries.items()}
+
+
+_channel_pool = _ChannelPool()
+
+
+def channel_pool_stats() -> dict[str, int]:
+    return _channel_pool.stats()
+
+
+class _DecodingFuture(cf.Future):
+    """Adapts a grpc future into a concurrent.futures.Future, decoding the
+    raw reply bytes with ``decode`` on completion."""
+
+    @classmethod
+    def wrap(cls, grpc_future, decode: Callable[[bytes], Any]) -> "cf.Future":
+        out = cls()
+        out.set_running_or_notify_cancel()
+
+        def _done(gf):
+            try:
+                out.set_result(decode(gf.result()))
+            except BaseException as exc:  # noqa: BLE001
+                out.set_exception(exc)
+
+        grpc_future.add_done_callback(_done)
+        return out
+
+
+class GrpcTransport(Transport):
+    """Courier-over-gRPC with pooled channels and framed serialization.
+
+    ``wire_format="frames"`` (default) uses the protocol-5 out-of-band
+    frame format; ``"legacy"`` emits the pre-frames bare-cloudpickle blobs
+    (the server mirrors whichever format the request used — this is the
+    benchmark baseline and the mixed-version compatibility path).
+    """
+
+    def __init__(self, endpoint: str, timeout: Optional[float] = None,
+                 wire_format: str = "frames"):
+        if endpoint.startswith("grpc://"):
+            endpoint = endpoint[len("grpc://"):]
+        if wire_format not in ("frames", "legacy"):
+            raise ValueError(f"unknown wire_format {wire_format!r}")
+        self.endpoint = f"grpc://{endpoint}"
+        self._target = endpoint
+        self._timeout = timeout
+        self._legacy = wire_format == "legacy"
+        self._lock = threading.Lock()
+        self._channel: Optional[grpc.Channel] = None
+        self._unary = None
+        self._unary_batch = None
+        self._closed = False
+
+    # -- channel lifecycle ---------------------------------------------------
+    def _callables(self):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"transport to {self.endpoint} is closed")
+            if self._channel is None:
+                self._channel = _channel_pool.acquire(self._target)
+                self._unary = self._channel.unary_unary(
+                    COURIER_METHOD,
+                    request_serializer=None, response_deserializer=None)
+                self._unary_batch = self._channel.unary_unary(
+                    COURIER_BATCH_METHOD,
+                    request_serializer=None, response_deserializer=None)
+            return self._unary, self._unary_batch
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            had_channel = self._channel is not None
+            self._channel = None
+            self._unary = None
+            self._unary_batch = None
+        if had_channel:
+            _channel_pool.release(self._target)
+
+    # -- calls ---------------------------------------------------------------
+    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        unary, _ = self._callables()
+        payload = ser.encode_call(method, args, kwargs, legacy=self._legacy)
+        # wait_for_ready: don't fail calls issued before the server node
+        # finished binding (launch is asynchronous).
+        reply = unary(payload, timeout=self._timeout, wait_for_ready=True)
+        return ser.decode_reply(reply)
+
+    def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
+        unary, _ = self._callables()
+        payload = ser.encode_call(method, args, kwargs, legacy=self._legacy)
+        gf = unary.future(payload, timeout=self._timeout, wait_for_ready=True)
+        return _DecodingFuture.wrap(gf, ser.decode_reply)
+
+    def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
+        _, batch = self._callables()
+        payload = ser.encode_batch_call(calls, legacy=self._legacy)
+        reply = batch(payload, timeout=self._timeout, wait_for_ready=True)
+        return ser.decode_batch_reply(reply)
+
+    def batch_call_future(self, calls: Sequence[Call]) -> cf.Future:
+        _, batch = self._callables()
+        payload = ser.encode_batch_call(calls, legacy=self._legacy)
+        gf = batch.future(payload, timeout=self._timeout, wait_for_ready=True)
+        return _DecodingFuture.wrap(gf, ser.decode_batch_reply)
+
+    def __repr__(self) -> str:
+        fmt = "legacy" if self._legacy else "frames"
+        return f"GrpcTransport({self.endpoint}, wire_format={fmt!r})"
+
+
+class InProcTransport(Transport):
+    """Shared-memory fast path: direct invocation, zero serialization.
+
+    Mirrors the gRPC server's exposure rules (no ``run``, no ``_private``)
+    so a program behaves the same whichever transport launch picked.
+    Exceptions propagate as the *original* exception objects — there is no
+    wire to strip tracebacks — except batch statuses, which carry them
+    unmodified in the ``err`` slot.
+    """
+
+    def __init__(self, name: str):
+        self.endpoint = f"inproc://{name}"
+        self._name = name
+        self._obj = None
+
+    def _target_obj(self) -> Any:
+        if self._obj is None:
+            self._obj = inprocess.lookup(self._name)
+        return self._obj
+
+    def _resolve(self, method: str):
+        if method.startswith("_") or method == "run":
+            raise ser.RemoteError(
+                f"method {method!r} is not exposed over courier")
+        return getattr(self._target_obj(), method)
+
+    def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        return self._resolve(method)(*args, **kwargs)
+
+    def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
+        return inprocess.shared_pool().submit(self.call, method, args, kwargs)
+
+    def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
+        statuses = []
+        for method, args, kwargs in calls:
+            try:
+                statuses.append(ser.make_ok_status(self.call(method, args,
+                                                             kwargs)))
+            except BaseException as exc:  # noqa: BLE001 - per-call isolation
+                statuses.append(ser.make_error_status(exc))
+        return statuses
+
+    def batch_call_future(self, calls: Sequence[Call]) -> cf.Future:
+        return inprocess.shared_pool().submit(self.batch_call, list(calls))
+
+    def __repr__(self) -> str:
+        return f"InProcTransport({self.endpoint})"
+
+
+def make_transport(endpoint: str, timeout: Optional[float] = None,
+                   wire_format: str = "frames") -> Transport:
+    """Build the most appropriate transport for a resolved endpoint."""
+    if endpoint.startswith("inproc://"):
+        return InProcTransport(endpoint[len("inproc://"):])
+    # grpc://host:port, or a bare host:port (numeric port) for convenience.
+    # Anything else fails fast — with wait_for_ready a typo'd endpoint
+    # would otherwise block forever instead of erroring.
+    if endpoint.startswith("grpc://") or re.fullmatch(
+            r"[^:/]+:\d+", endpoint):
+        return GrpcTransport(endpoint, timeout=timeout,
+                             wire_format=wire_format)
+    raise ValueError(f"unknown courier endpoint scheme: {endpoint!r}")

@@ -42,7 +42,12 @@ def map_handles(obj: Any, fn) -> Any:
         return fn(obj)
     if isinstance(obj, (list, tuple)):
         mapped = [map_handles(v, fn) for v in obj]
-        return type(obj)(mapped) if not isinstance(obj, tuple) else tuple(mapped)
+        if isinstance(obj, tuple):
+            # NamedTuple subclasses construct from positional fields; a
+            # plain tuple() here would erase the concrete type.
+            return type(obj)(*mapped) if hasattr(obj, "_fields") \
+                else tuple(mapped)
+        return type(obj)(mapped)
     if isinstance(obj, dict):
         return {k: map_handles(v, fn) for k, v in obj.items()}
     return obj

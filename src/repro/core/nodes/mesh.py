@@ -48,9 +48,8 @@ class _MeshExecutable(Executable):
                 f"host platform has {n_have} "
                 "(set XLA_FLAGS=--xla_force_host_platform_device_count=N "
                 "before jax initializes, or shrink the mesh resource)")
-        return jax.make_mesh(
-            tuple(self._mesh_shape), tuple(self._mesh_axes),
-            axis_types=(jax.sharding.AxisType.Auto,) * len(self._mesh_axes))
+        from repro.sharding.compat import make_mesh
+        return make_mesh(self._mesh_shape, self._mesh_axes)
 
     def run(self, context: WorkerContext) -> None:
         from repro.core import courier
@@ -66,7 +65,9 @@ class _MeshExecutable(Executable):
             else:
                 hostport = endpoint[len("grpc://"):]
                 host, port = hostport.rsplit(":", 1)
-                server = courier.CourierServer(obj, port=int(port), host=host)
+                server = courier.CourierServer(
+                    obj, port=int(port), host=host,
+                    handler_init=lambda: set_current_context(context))
                 server.start()
             run_fn = getattr(obj, "run", None)
             if callable(run_fn):

@@ -26,6 +26,9 @@ logger = logging.getLogger(__name__)
 
 
 class CourierHandle(Handle):
+    """Dereferences to the unified CourierClient; the endpoint scheme picks
+    the transport (inproc fast path vs. gRPC on a pooled channel)."""
+
     def dereference(self) -> Any:
         return courier.client_for(self.address.endpoint)
 
@@ -73,7 +76,11 @@ class _CourierExecutable(Executable):
             elif endpoint.startswith("grpc://"):
                 hostport = endpoint[len("grpc://"):]
                 host, port = hostport.rsplit(":", 1)
-                server = courier.CourierServer(obj, port=int(port), host=host)
+                # handler_init: RPC handler threads get this node's context,
+                # so service methods can call lp.stop_program() remotely.
+                server = courier.CourierServer(
+                    obj, port=int(port), host=host,
+                    handler_init=lambda: set_current_context(context))
                 server.start()
             else:
                 raise ValueError(f"unknown endpoint scheme {endpoint!r}")

@@ -46,13 +46,21 @@ class ModelServer:
 
 
 class Batcher:
-    """Coalesces concurrent requests into model-server batches."""
+    """Coalesces concurrent requests into model-server batches.
 
-    def __init__(self, server, max_batch: int = 8, max_wait_s: float = 0.02):
+    The model server is driven through ``futures.generate`` so the batcher
+    thread goes straight back to coalescing the next group while the mesh
+    is still computing the previous one (bounded by ``max_inflight``),
+    instead of blocking on one RPC per batch.
+    """
+
+    def __init__(self, server, max_batch: int = 8, max_wait_s: float = 0.02,
+                 max_inflight: int = 2):
         self._server = server
         self._q: queue.Queue = queue.Queue()
         self._max_batch = max_batch
         self._max_wait = max_wait_s
+        self._inflight = threading.Semaphore(max_inflight)
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
         self.batches = []
@@ -61,7 +69,10 @@ class Batcher:
         """Blocking request: returns the completed sequence."""
         done = queue.Queue(maxsize=1)
         self._q.put((np.asarray(prompt, np.int32), done))
-        return done.get(timeout=120)
+        out = done.get(timeout=120)
+        if isinstance(out, BaseException):
+            raise out
+        return out
 
     def _loop(self):
         while True:
@@ -77,31 +88,65 @@ class Batcher:
                 except queue.Empty:
                     break
             prompts = np.stack([g[0] for g in group])
-            outs = self._server.generate(prompts)
+            self._inflight.acquire()
+            fut = self._server.futures.generate(prompts)
             self.batches.append(len(group))
-            for (_, done), row in zip(group, outs):
-                done.put(row)
+            fut.add_done_callback(
+                lambda f, group=group: self._deliver(group, f))
+
+    def _deliver(self, group, fut):
+        self._inflight.release()
+        try:
+            outs = fut.result()
+        except BaseException as exc:  # noqa: BLE001 - fail the waiters
+            for _, done in group:
+                done.put(exc)
+            return
+        for (_, done), row in zip(group, outs):
+            done.put(row)
 
     def stats(self):
         return {"batches": list(self.batches)}
 
 
 class Client:
+    """Closed-loop client with a bounded pipeline window.
+
+    Requests go out as ``futures.submit`` with up to ``window`` in flight
+    (rather than one blocking RPC per request), which is what actually
+    gives the batcher concurrent prompts to coalesce. Latency samples are
+    flushed to the meter in a single ``batch_call`` — N records, one frame.
+    """
+
     def __init__(self, batcher, meter, num_requests: int, prompt_len: int,
-                 vocab: int, seed: int):
+                 vocab: int, seed: int, window: int = 4):
         self._batcher = batcher
         self._meter = meter
         self._n = num_requests
         self._rng = np.random.default_rng(seed)
         self._plen = prompt_len
         self._vocab = vocab
+        self._window = max(1, window)
 
     def run(self):
+        pending: list[tuple[float, object]] = []
+        records: list[tuple[float, int]] = []
+
+        def drain_one():
+            t0, fut = pending.pop(0)
+            out = fut.result(timeout=120)
+            records.append((time.monotonic() - t0, len(out)))
+
         for _ in range(self._n):
+            while len(pending) >= self._window:
+                drain_one()
             prompt = self._rng.integers(0, self._vocab, self._plen)
-            t0 = time.monotonic()
-            out = self._batcher.submit(prompt)
-            self._meter.record(time.monotonic() - t0, len(out))
+            pending.append((time.monotonic(),
+                            self._batcher.futures.submit(prompt)))
+        while pending:
+            drain_one()
+        self._meter.batch_call(
+            [("record", (lat, out_len), {}) for lat, out_len in records])
 
 
 class Meter:

@@ -27,13 +27,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
-def _ring_matmul(axis_name: str, x_shard: jax.Array, w: jax.Array):
+def _ring_matmul(axis_name: str, tp: int, x_shard: jax.Array, w: jax.Array):
     """Inside shard_map. x_shard: [B, S, D/tp]; w: [D/tp·tp?, F/tp] — w holds
     this device's column shard with FULL D rows: [D, F/tp].
 
-    Each step contributes x_shard_j @ w[rows_j] and rotates x.
+    Each step contributes x_shard_j @ w[rows_j] and rotates x. ``tp`` is the
+    static tp-axis size, taken from the mesh by the caller (the ppermute
+    permutation and loop trip count must be static; ``jax.lax.axis_size``
+    does not exist on older jax).
     """
-    tp = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     d_shard = x_shard.shape[-1]
 
@@ -64,8 +66,9 @@ def collective_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
     W column-sharded — without a blocking X all-gather."""
     dp = tuple(a for a in dp_axes if a in mesh.axis_names)
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = jax.shard_map(
-        functools.partial(_ring_matmul, tp_axis),
+    from repro.sharding.compat import shard_map
+    fn = shard_map(
+        functools.partial(_ring_matmul, tp_axis, mesh.shape[tp_axis]),
         mesh=mesh,
         in_specs=(P(dp_spec, None, tp_axis), P(None, tp_axis)),
         out_specs=P(dp_spec, None, tp_axis),

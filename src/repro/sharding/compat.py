@@ -1,0 +1,34 @@
+"""jax version compatibility helpers (mesh construction, shard_map).
+
+Newer jax exposes ``jax.make_mesh(..., axis_types=...)`` and
+``jax.shard_map(..., check_vma=...)``; older versions (e.g. 0.4.x) have
+neither kwarg and keep shard_map under ``jax.experimental`` with the
+``check_rep`` spelling. Route both constructions through here.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis_types where the kwarg exists."""
+    import jax
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    return jax.make_mesh(
+        tuple(axis_shapes), tuple(axis_names),
+        axis_types=(axis_type.Auto,) * len(axis_names))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the old experimental fallback."""
+    import jax
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        return new_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as legacy_sm
+    return legacy_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check_vma)

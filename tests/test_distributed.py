@@ -5,6 +5,7 @@ These tests spawn a subprocess with XLA_FLAGS for 8 placeholder devices
 (the main test process must keep seeing 1 device)."""
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -16,17 +17,22 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.sharding.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 """
 
 
 def _run(body: str) -> str:
     code = _PRELUDE + textwrap.dedent(body)
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+    # Propagate the platform pin: without it jax probes for accelerators
+    # in the stripped subprocess env (TPU metadata fetch retries cost
+    # minutes per test on CPU-only hosts).
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
     proc = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=600, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+        timeout=600, env=env)
     assert proc.returncode == 0, proc.stderr[-4000:]
     return proc.stdout
 
@@ -92,8 +98,7 @@ def test_grad_compression_cross_pod():
     out = _run("""
     import os
     from repro.train.grad_compression import compress_reduce_pod
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
     g = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 64.0}
     # replicate across pods with different values -> psum averages them
     def make(v):
@@ -132,6 +137,8 @@ def test_dryrun_cell_compiles_on_small_mesh(arch, shape):
     compiled = cells_lib.lower_cell(cell, mesh).compile()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0]
     print("OK", ma.temp_size_in_bytes, float(ca.get("flops", 0.0)))
     """)
     assert out.startswith("OK")

@@ -4,7 +4,9 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.courier import serialization as ser
 from repro.core.fault import RestartPolicy
@@ -122,8 +124,8 @@ def test_fit_spec_always_divisible(shape):
     from repro.sharding.rules import fit_spec
     if len(jax.devices()) < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     spec = fit_spec(mesh, shape, [("data", "model")] * len(shape))
     assert isinstance(spec, PartitionSpec)
     # every sharded dim is divisible by the axis product

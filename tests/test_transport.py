@@ -1,0 +1,224 @@
+"""Transport stack: framed zero-copy wire format, unified client over both
+transports, batched RPC semantics, channel pooling, lifecycle hygiene."""
+
+import threading
+from collections import namedtuple
+
+import numpy as np
+import pytest
+
+from repro.core import courier, handles
+from repro.core.courier import serialization as ser
+from repro.core.courier.client import CourierClient
+from repro.core.courier.server import CourierServer
+
+Point = namedtuple("Point", "x y")
+
+
+class Service:
+    def add(self, a, b=0):
+        return a + b
+
+    def echo(self, x):
+        return x
+
+    def scale_point(self, p, k):
+        return Point(p.x * k, p.y * k)
+
+    def boom(self):
+        raise ValueError("intentional")
+
+    def whoami_thread(self):
+        return threading.current_thread().name
+
+
+@pytest.fixture(params=["grpc", "inproc"])
+def client(request):
+    svc = Service()
+    if request.param == "grpc":
+        srv = CourierServer(svc)
+        srv.start()
+        cli = courier.client_for(srv.endpoint)
+        yield cli
+        cli.close()
+        srv.stop()
+    else:
+        courier.inprocess.register("transport_svc", svc)
+        yield courier.client_for("inproc://transport_svc")
+        courier.inprocess.unregister("transport_svc")
+
+
+# ---- wire format -------------------------------------------------------------
+
+def test_large_array_roundtrip_both_transports(client):
+    arr = np.arange(1 << 20, dtype=np.float32)  # 4 MiB
+    out = client.echo(arr)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_framed_encode_keeps_arrays_out_of_band():
+    arr = np.zeros(1 << 20, np.float32)  # 4 MiB payload
+    data = ser.dumps({"x": arr, "tag": "t"})
+    assert ser.is_framed(data)
+    # The pickle stream (frame 0) must stay tiny: the array travels as an
+    # out-of-band frame, not embedded bytes.
+    mv = memoryview(data)
+    (nframes,) = ser._NFRAMES.unpack_from(mv, 2)
+    assert nframes >= 2
+    (stream_len,) = ser._FRAMELEN.unpack_from(mv, 2 + ser._NFRAMES.size)
+    assert stream_len < 4096
+    out = ser.loads(data)
+    np.testing.assert_array_equal(out["x"], arr)
+
+
+def test_decoded_arrays_are_zero_copy_views():
+    data = ser.dumps(np.arange(1024, dtype=np.int32))
+    out = ser.loads(data)
+    assert out.base is not None        # aliases the received message...
+    assert not out.flags.writeable     # ...so it is read-only by contract
+    np.testing.assert_array_equal(np.copy(out), np.arange(1024))
+
+
+def test_jax_leaves_transport_without_deep_copy_pass(client):
+    import jax.numpy as jnp
+    out = client.echo({"p": jnp.ones((128,)), "n": 3})
+    np.testing.assert_array_equal(np.asarray(out["p"]), np.ones(128))
+    assert out["n"] == 3
+
+
+def test_namedtuple_survives_serialization():
+    out = ser.loads(ser.dumps(Point(1, np.ones(4))))
+    assert type(out).__name__ == "Point"
+    assert out.x == 1
+    np.testing.assert_array_equal(out.y, np.ones(4))
+
+
+def test_namedtuple_survives_rpc(client):
+    out = client.scale_point(Point(2, 3), 10)
+    assert isinstance(out, tuple) and type(out).__name__ == "Point"
+    assert out == (20, 30)
+
+
+def test_legacy_wire_format_interops_with_framed_server():
+    srv = CourierServer(Service())
+    srv.start()
+    try:
+        with CourierClient(srv.endpoint, wire_format="legacy") as legacy:
+            assert legacy.add(2, b=3) == 5
+            arr = np.arange(4096, dtype=np.float32)
+            np.testing.assert_array_equal(legacy.echo(arr), arr)
+            with pytest.raises(courier.RemoteError, match="intentional"):
+                legacy.boom()
+    finally:
+        srv.stop()
+
+
+# ---- futures & errors --------------------------------------------------------
+
+def test_remote_error_through_futures_grpc():
+    srv = CourierServer(Service())
+    srv.start()
+    try:
+        with courier.client_for(srv.endpoint) as cli:
+            fut = cli.futures.boom()
+            with pytest.raises(courier.RemoteError, match="intentional"):
+                fut.result(timeout=10)
+    finally:
+        srv.stop()
+
+
+def test_inproc_futures_raise_original_exception():
+    courier.inprocess.register("err_svc", Service())
+    try:
+        cli = courier.client_for("inproc://err_svc")
+        with pytest.raises(ValueError, match="intentional"):
+            cli.futures.boom().result(timeout=10)
+    finally:
+        courier.inprocess.unregister("err_svc")
+
+
+def test_inproc_refuses_run_and_private_like_grpc():
+    class WithRun(Service):
+        def run(self):
+            raise AssertionError("run must not be callable remotely")
+
+    courier.inprocess.register("run_svc", WithRun())
+    try:
+        cli = courier.client_for("inproc://run_svc")
+        with pytest.raises(courier.RemoteError):
+            cli.run()
+        with pytest.raises(AttributeError):
+            cli._private()
+    finally:
+        courier.inprocess.unregister("run_svc")
+
+
+# ---- batched RPC -------------------------------------------------------------
+
+def test_batch_call_preserves_order(client):
+    calls = [("add", (i,), {"b": 100}) for i in range(32)]
+    assert client.batch_call(calls) == [100 + i for i in range(32)]
+
+
+def test_batch_call_error_isolation(client):
+    calls = [("add", (1,), {}), ("boom", (), {}), ("add", (2,), {})]
+    out = client.batch_call(calls, return_exceptions=True)
+    assert out[0] == 1 and out[2] == 2
+    assert isinstance(out[1], courier.RemoteError)
+    with pytest.raises(courier.RemoteError):
+        client.batch_call(calls)
+
+
+def test_batch_call_future(client):
+    fut = client.futures.batch_call(
+        [("add", (i,), {}) for i in range(4)] + [("boom", (), {})])
+    out = fut.result(timeout=10)
+    assert out[:4] == [0, 1, 2, 3]
+    assert isinstance(out[4], Exception)
+
+
+def test_batch_call_ships_shared_buffers_once():
+    arrs = [np.full(1024, i, np.float32) for i in range(4)]
+    data = ser.encode_batch_call([("echo", (a,), {}) for a in arrs])
+    calls = ser.decode_batch_call(data)
+    for i, (method, args, _) in enumerate(calls):
+        assert method == "echo"
+        np.testing.assert_array_equal(args[0], arrs[i])
+
+
+# ---- channel pooling & lifecycle --------------------------------------------
+
+def test_channel_pool_shared_and_released():
+    srv = CourierServer(Service())
+    srv.start()
+    target = srv.endpoint[len("grpc://"):]
+    try:
+        a = courier.client_for(srv.endpoint)
+        b = courier.client_for(srv.endpoint)
+        assert a.add(1) == 1 and b.add(2) == 2  # both force channel acquire
+        assert courier.channel_pool_stats().get(target) == 2
+        a.close()
+        assert courier.channel_pool_stats().get(target) == 1
+        b.close()
+        b.close()  # double-close is a no-op
+        assert target not in courier.channel_pool_stats()
+    finally:
+        srv.stop()
+
+
+def test_client_context_manager_and_server_double_stop():
+    srv = CourierServer(Service())
+    srv.start()
+    with courier.client_for(srv.endpoint) as cli:
+        assert cli.add(3, b=4) == 7
+    srv.stop()
+    srv.stop()  # idempotent
+    never_started = CourierServer(Service())
+    never_started.stop()  # stop before start is safe too
+
+
+def test_map_handles_preserves_namedtuple():
+    out = handles.map_handles(Point([1, 2], {"k": (3,)}), lambda h: h)
+    assert type(out).__name__ == "Point"
+    assert out.x == [1, 2] and out.y == {"k": (3,)}
