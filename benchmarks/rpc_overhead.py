@@ -1,13 +1,25 @@
 """Paper §1 claim: "Launchpad adds no additional overhead — communication
 between individual services will be just as fast as the underlying
 communication protocol." Measured: direct python call vs in-process
-courier channel vs courier-over-gRPC, with a payload sweep (1 KiB ->
-8 MiB), the pre-refactor ("legacy") wire format as the A/B baseline over
-the same server, and batched RPC amortization.
+courier channel vs the two cross-process transports — courier-over-gRPC
+and the shared-memory ring (``shm://``) — with a payload sweep (1 KiB ->
+8 MiB), batched RPC amortization, and the pre-refactor ("legacy") wire
+format as a gRPC A/B baseline.
+
+The cross-process arms (``rpc/shm/*``, ``rpc/grpc/*``,
+``rpc/grpc_legacy/*``) run against ONE forked server process that serves
+both transports at once — the same-host process-launcher topology the shm
+transport exists for — and are measured *paired*: the arms alternate
+chunk-by-chunk per payload so they see identical background conditions.
+(Before the shm transport landed, rpc/grpc/* was measured against an
+in-process loopback server; absolute values are not comparable across
+that change.)
 """
 
 from __future__ import annotations
 
+import multiprocessing as mp
+import os
 import time
 
 import numpy as np
@@ -55,41 +67,62 @@ def _sweep(emit, prefix: str, call, derived_first: str = "") -> None:
              derived_first if label == PAYLOADS[0][0] else "")
 
 
-def _ab_sweep(emit, framed_call, legacy_call) -> None:
-    """Paired A/B: alternate framed/legacy chunks per payload so both see
-    the same background conditions (sequential sweeps drift apart on noisy
-    shared hosts)."""
+def _paired_chunks(arms, n: int, repeats: int = 12) -> dict[str, float]:
+    """us/call per arm, min over ``repeats`` chunks with the arms
+    alternating chunk-by-chunk so every arm sees the same background
+    conditions (sequential sweeps drift apart on noisy shared hosts)."""
+    chunk = max(1, n // repeats)
+    for _, call in arms:
+        call()  # warm every arm (incl. bulk-slot creation / page faults)
+        call()
+    best = {name: float("inf") for name, _ in arms}
+    for _ in range(repeats):
+        for name, call in arms:
+            t0 = time.perf_counter()
+            for _ in range(chunk):
+                call()
+            best[name] = min(best[name], (time.perf_counter() - t0) / chunk)
+    return {name: us * 1e6 for name, us in best.items()}
+
+
+def _paired_sweep(emit, arms: list[tuple[str, object]],
+                  derived: dict[str, str]) -> None:
     for label, size, n in PAYLOADS:
         payload = np.zeros(size, np.uint8)
-        chunk = max(1, n // 8)
-        framed_call(payload)
-        legacy_call(payload)  # warm both paths
-        best = {"frames": float("inf"), "legacy": float("inf")}
-        for _ in range(8):
-            for key, call in (("frames", framed_call), ("legacy", legacy_call)):
-                t0 = time.perf_counter()
-                for _ in range(chunk):
-                    call(payload)
-                best[key] = min(best[key],
-                                (time.perf_counter() - t0) / chunk)
-        emit(f"rpc/grpc/echo{label}", best["frames"] * 1e6, "")
-        emit(f"rpc/grpc_legacy/echo{label}", best["legacy"] * 1e6, "")
+        best = _paired_chunks(
+            [(name, lambda call=call: call(payload)) for name, call in arms],
+            n)
+        for name, _ in arms:
+            emit(f"{name}/echo{label}", best[name],
+                 derived.get(name, "") if label == PAYLOADS[0][0] else "")
 
 
 def _ser_sweep(emit) -> None:
-    """Wire-format cost in isolation (no gRPC): encode + decode per format."""
+    """Wire-format cost in isolation (no transport): encode + decode."""
     from repro.core.courier import serialization as ser
     for label, size, _ in PAYLOADS[-2:]:  # 1 MiB and 8 MiB
         msg = ("echo", (np.zeros(size, np.uint8),), {})
         framed, legacy = ser.dumps(msg), ser.legacy_dumps(msg)
+        buf = bytearray(ser.framed_size(ser.encode_frames(msg)))
         emit(f"ser/frames/enc{label}", _time_call(lambda: ser.dumps(msg), 64),
              "out-of-band buffers")
+        emit(f"ser/scatter/enc{label}",
+             _time_call(lambda: ser.encode_call_into(buf, *msg), 64),
+             "encode_call_into (no join)")
         emit(f"ser/legacy/enc{label}",
              _time_call(lambda: ser.legacy_dumps(msg), 64), "in-band pickle")
         emit(f"ser/frames/dec{label}", _time_call(lambda: ser.loads(framed), 64),
              "zero-copy views")
         emit(f"ser/legacy/dec{label}", _time_call(lambda: ser.loads(legacy), 64),
              "")
+
+
+def _server_child(shm_name: str, endpoint_q, stop_ev) -> None:
+    srv = CourierServer(Echo(), shm_name=shm_name)
+    srv.start()
+    endpoint_q.put(srv.endpoint)
+    stop_ev.wait()
+    srv.stop()
 
 
 def run(emit):
@@ -102,29 +135,51 @@ def run(emit):
     courier.inprocess.register("echo_bench", obj)
     with courier.client_for("inproc://echo_bench") as cli:
         emit("rpc/inproc/ping", _time_call(cli.ping, n_ping),
-             "shared-memory channel")
+             "same-process channel")
         _sweep(emit, "rpc/inproc", cli.echo)
     courier.inprocess.unregister("echo_bench")
 
-    srv = CourierServer(obj)
-    srv.start()
+    # Cross-process: one server process serving shm + gRPC at once, so the
+    # arms are a true A/B over identical dispatch.
+    ctx = mp.get_context("fork")
+    shm_name = f"bench{os.getpid():x}"
+    endpoint_q = ctx.Queue()
+    stop_ev = ctx.Event()
+    child = ctx.Process(target=_server_child,
+                        args=(shm_name, endpoint_q, stop_ev), daemon=True)
+    child.start()
+    grpc_ep = endpoint_q.get(timeout=30)
     try:
-        # Framed (new) vs pre-refactor wire format over the SAME server (it
-        # mirrors the request's format): the A/B for the zero-copy win.
-        with courier.client_for(srv.endpoint) as g, \
-                CourierClient(srv.endpoint, wire_format="legacy") as gl:
-            emit("rpc/grpc/ping", _time_call(g.ping, n_ping),
+        with courier.client_for(f"shm://{shm_name}+{grpc_ep}") as s, \
+                courier.client_for(grpc_ep) as g, \
+                CourierClient(grpc_ep, wire_format="legacy") as gl:
+            assert isinstance(s.transport, courier.ShmTransport)
+            pings = _paired_chunks(
+                [("rpc/shm", s.ping), ("rpc/grpc", g.ping),
+                 ("rpc/grpc_legacy", gl.ping)], n_ping)
+            emit("rpc/shm/ping", pings["rpc/shm"], "shared-memory ring")
+            emit("rpc/grpc/ping", pings["rpc/grpc"],
                  "courier-over-grpc framed wire format")
-            emit("rpc/grpc_legacy/ping", _time_call(gl.ping, n_ping),
+            emit("rpc/grpc_legacy/ping", pings["rpc/grpc_legacy"],
                  "pre-refactor wire format")
-            _ab_sweep(emit, g.echo, gl.echo)
+            _paired_sweep(
+                emit,
+                [("rpc/shm", s.echo), ("rpc/grpc", g.echo),
+                 ("rpc/grpc_legacy", gl.echo)],
+                derived={"rpc/shm": "ring + bulk slot",
+                         "rpc/grpc": "paired vs shm"})
             # Batched RPC: 64 pings in one frame vs 64 single round trips.
             batch = [("ping", (), {})] * 64
-            us_batch = _time_call(lambda: g.batch_call(batch), 50) / 64
-            emit("rpc/grpc/ping_batched64", us_batch,
+            emit("rpc/shm/ping_batched64",
+                 _time_call(lambda: s.batch_call(batch), 50) / 64,
+                 "per-call cost at 64 calls/frame")
+            emit("rpc/grpc/ping_batched64",
+                 _time_call(lambda: g.batch_call(batch), 50) / 64,
                  "per-call cost at 64 calls/frame")
     finally:
-        srv.stop()
-        srv.stop()  # idempotent double-stop (exercised on purpose)
+        stop_ev.set()
+        child.join(timeout=10)
+        if child.is_alive():
+            child.terminate()
 
     _ser_sweep(emit)

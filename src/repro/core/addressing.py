@@ -6,13 +6,60 @@ and unknown until launch. During *launch*, the launcher walks the program,
 assigns each placeholder a concrete endpoint, and records the mapping in an
 :class:`AddressTable`. Handles are serialized *after* resolution, so a
 deserialized handle on a remote worker carries its resolved endpoint.
+
+Endpoint schemes (see ``courier/README.md`` for the full table):
+
+    inproc://<name>          same-process registry (thread launcher /
+                             colocation)
+    shm://<name>             shared-memory ring pair, same-host processes
+    grpc://host:port         courier-over-gRPC (works anywhere)
+
+An endpoint string may join several candidate URIs with ``+``, preferred
+first — ``ProcessLauncher`` emits ``shm://<name>+grpc://127.0.0.1:<port>``
+so same-host clients take the ring and everything else (including clients
+facing a stale rendezvous left by a crashed server) falls back to gRPC.
+Ports in ``grpc://`` endpoints emitted by the built-in launchers are held
+by a live ``PortReservation`` socket from assignment until the server
+binds, so the table never advertises a port another process can steal.
 """
 
 from __future__ import annotations
 
 import itertools
 import threading
-from typing import Optional
+from typing import NamedTuple, Optional
+
+
+class EndpointParts(NamedTuple):
+    """A resolved endpoint split into its per-scheme components.
+
+    Any field is ``None`` when the endpoint does not carry that scheme;
+    ``grpc`` is the bare ``host:port`` with the prefix stripped.
+    """
+
+    inproc: Optional[str]
+    shm: Optional[str]
+    grpc: Optional[str]
+
+
+def parse_endpoint(endpoint: str) -> EndpointParts:
+    """Split a (possibly ``+``-joined) endpoint into scheme components.
+
+    Server-side executables use this to serve every advertised scheme;
+    raises ``ValueError`` on an unknown scheme so typos fail at launch,
+    not as a mysterious connect hang.
+    """
+    inproc = shm = grpc = None
+    for part in endpoint.split("+"):
+        if part.startswith("inproc://"):
+            inproc = part[len("inproc://"):]
+        elif part.startswith("shm://"):
+            shm = part[len("shm://"):]
+        elif part.startswith("grpc://"):
+            grpc = part[len("grpc://"):]
+        else:
+            raise ValueError(f"unknown endpoint scheme {part!r}")
+    return EndpointParts(inproc, shm, grpc)
 
 _uid = itertools.count()
 _uid_lock = threading.Lock()

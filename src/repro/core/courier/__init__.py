@@ -1,26 +1,32 @@
 """Courier: the RPC layer under Launchpad handles (paper §4, footnote 2).
 
 Layered as: ``CourierClient`` (proxy sugar) over a pluggable
-:class:`Transport` (``GrpcTransport`` / ``InProcTransport``) over the
-framed zero-copy wire format (``serialization``). See README.md here.
+:class:`Transport` (``GrpcTransport`` / ``ShmTransport`` /
+``InProcTransport``) over the framed zero-copy wire format
+(``serialization``). See README.md here.
 """
 
 from __future__ import annotations
 
-from repro.core.courier import inprocess
+from repro.core.courier import inprocess, shm
 from repro.core.courier.client import CourierClient
 from repro.core.courier.serialization import RemoteError
 from repro.core.courier.server import CourierServer
 from repro.core.courier.transport import (GrpcTransport, InProcTransport,
-                                          Transport, channel_pool_stats,
-                                          make_transport)
+                                          ShmTransport, Transport,
+                                          channel_pool_stats, make_transport)
 
 
 def client_for(endpoint: str) -> CourierClient:
     """Build the unified client over the most appropriate transport.
 
-    ``inproc://name`` -> shared-memory direct transport (colocated services)
+    ``inproc://name`` -> same-process direct transport (colocated services)
+    ``shm://name`` -> shared-memory ring pair (same-host processes)
     ``grpc://host:port`` -> courier-over-gRPC on a pooled channel
+
+    Endpoints may list several candidates joined by ``+`` (preferred
+    first); the first viable one wins, e.g. ``shm://n+grpc://h:p`` uses
+    the ring on the server's host and gRPC everywhere else.
     """
     return CourierClient(endpoint)
 
@@ -31,9 +37,11 @@ __all__ = [
     "GrpcTransport",
     "InProcTransport",
     "RemoteError",
+    "ShmTransport",
     "Transport",
     "channel_pool_stats",
     "client_for",
     "inprocess",
     "make_transport",
+    "shm",
 ]

@@ -69,9 +69,13 @@ class CourierClient:
     """Client for a courier endpoint, over whichever transport fits it.
 
     ``grpc://host:port`` -> :class:`GrpcTransport` (pooled channel, framed
-    zero-copy wire format); ``inproc://name`` -> :class:`InProcTransport`
-    (direct invocation). Close (or use as a context manager) to release
-    the pooled channel; double-close is a no-op.
+    zero-copy wire format); ``shm://name`` -> :class:`ShmTransport`
+    (same-host shared-memory rings); ``inproc://name`` ->
+    :class:`InProcTransport` (direct invocation). A ``+``-joined endpoint
+    (e.g. ``shm://n+grpc://h:p`` from the process launcher) tries the
+    candidates in order — shm when a healthy same-host listener exists,
+    gRPC otherwise. Close (or use as a context manager) to release the
+    pooled channel / rings; double-close is a no-op.
     """
 
     def __init__(self, endpoint: str, timeout: Optional[float] = None,

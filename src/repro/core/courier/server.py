@@ -23,6 +23,7 @@ from typing import Any, Callable, Optional
 import grpc
 
 from repro.core.courier import serialization as ser
+from repro.core.courier import shm as shm_mod
 from repro.core.courier.transport import (COURIER_BATCH_METHOD,
                                           COURIER_METHOD, _GRPC_OPTIONS)
 
@@ -49,11 +50,18 @@ class CourierServer:
     handling thread — launchers use it to install the node's
     :class:`WorkerContext` so service code can call ``lp.stop_program()``
     from inside an RPC handler.
+
+    ``shm_name`` (optional) additionally serves same-host clients over a
+    shared-memory ring listener (``shm://<shm_name>``) alongside the gRPC
+    port — same dispatch, same exposure rules, same per-call batch
+    isolation; the process launcher emits dual endpoints so same-host
+    peers take the ring and everyone else falls back to gRPC.
     """
 
     def __init__(self, obj: Any, port: int = 0, host: str = "127.0.0.1",
                  max_workers: int = 16,
-                 handler_init: Optional[Callable[[], None]] = None):
+                 handler_init: Optional[Callable[[], None]] = None,
+                 shm_name: Optional[str] = None):
         self._obj = obj
         self._handler_init = handler_init
         self._lock = threading.Lock()  # guards lifecycle transitions
@@ -70,6 +78,9 @@ class CourierServer:
         if self._port == 0:
             raise RuntimeError(f"failed to bind courier server on {host}:{port}")
         self._host = host
+        self._shm_name = shm_name
+        self._shm_listener: Optional[shm_mod.ShmListener] = None
+        self._max_workers = max_workers
         self._started = False
         self._stopped = False
 
@@ -81,6 +92,13 @@ class CourierServer:
             if self._started:
                 return
             self._server.start()
+            if self._shm_name is not None and shm_mod.supported():
+                # Advertise the ring listener only once we actually serve.
+                self._shm_listener = shm_mod.ShmListener(
+                    self._shm_name, invoke=self._invoke,
+                    handler_init=self._handler_init,
+                    max_workers=self._max_workers)
+                self._shm_listener.start()
             self._started = True
 
     def stop(self, grace: Optional[float] = 0.5) -> None:
@@ -90,6 +108,10 @@ class CourierServer:
             if self._stopped:
                 return
             self._stopped = True
+            listener = self._shm_listener
+            self._shm_listener = None
+        if listener is not None:
+            listener.stop()
         self._server.stop(grace)
 
     def wait(self) -> None:
@@ -105,6 +127,10 @@ class CourierServer:
     @property
     def endpoint(self) -> str:
         return f"grpc://{self._host}:{self._port}"
+
+    @property
+    def shm_endpoint(self) -> Optional[str]:
+        return f"shm://{self._shm_name}" if self._shm_name else None
 
     @property
     def port(self) -> int:

@@ -1,0 +1,946 @@
+"""Shared-memory ring-buffer channel for same-host courier traffic.
+
+Two nodes the process launcher placed on one host still paid the full gRPC
+stack for every call (~2000x the in-process cost for a ping — see
+BENCH_rpc.json). This module moves framed courier messages between
+same-host processes over ``multiprocessing.shared_memory`` instead:
+
+* **Ring** — one SPSC byte ring per direction. The writer owns ``wpos``,
+  the reader owns ``rpos`` (each on its own cache line, published after
+  the payload), so neither side ever takes a cross-process lock on the
+  data path. Records are length-prefixed and contiguous; a record that
+  would straddle the wrap point is preceded by a pad record both sides
+  skip deterministically.
+* **Bulk spill slots** — a message larger than ``SPILL_THRESHOLD`` is
+  scatter-gathered (``serialization.write_framed_into``) into a
+  per-direction *bulk slot* side segment and only a tiny reference
+  record enters the control ring, so the ring stays small while 8 MiB
+  tensors move at memcpy speed. The slot is created lazily, reused for
+  the connection's lifetime (segment creation and first-touch page
+  faults cost milliseconds on the kernels we deploy on), grown
+  geometrically when a bigger message arrives, and always written at a
+  *fixed* offset — cycling a multi-MiB ring through the cache measures
+  ~3x slower than rewriting one hot region. One large message per
+  direction is in flight at a time (seq_written/seq_consumed handshake);
+  the writer only waits until the reader has *copied* the message out,
+  so compute still overlaps transfer.
+* **Doorbell** — waiting sides use an adaptive spin-then-micro-sleep loop
+  (a portable stand-in for a futex: hot peers rendezvous in microseconds,
+  idle peers cost ~0 CPU). Position loads/stores are 8-byte aligned, so
+  they are single movs on x86-64/arm64 — published last, read first.
+* **Rendezvous** — a server advertises under
+  ``$TMPDIR/courier-shm/<name>/listener.json``; a client creates the two
+  rings, drops a ``<conn>.connect`` file, and waits for the listener's
+  HELLO record. Liveness is pid-based: a stale directory left by a
+  crashed server is detected immediately (``probe`` -> "stale") so
+  callers can fall back to gRPC instead of deadlocking.
+
+Record layout (little-endian)::
+
+    size:u32 | kind:u32 | req_id:u64 | body[size - 16]
+
+``size == 0`` marks a pad record (skip to the wrap point). The body is a
+standard framed serialization message, or a spill reference::
+
+    \xc5\x02 | name_len:u16 | segment_name | total:u64
+"""
+
+from __future__ import annotations
+
+import contextlib
+import glob
+import json
+import os
+import socket
+import struct
+import tempfile
+import threading
+import time
+import uuid
+from concurrent import futures
+from multiprocessing import resource_tracker, shared_memory
+from typing import Any, Callable, Optional
+
+from repro.core.courier import serialization as ser
+
+# ---- tunables (module-level so tests/benchmarks can shrink them) ------------
+
+RING_CAPACITY = 1 << 20        # per-direction control-ring data bytes
+SPILL_THRESHOLD = 96 * 1024    # messages above this go to the bulk slot
+SLOT_HEADROOM = 1.5            # bulk slots are grown to msg_size * this
+CONNECT_WAIT_S = 5.0           # how long a client waits for the listener
+ACCEPT_WAIT_S = 5.0            # how long a client waits for HELLO
+_POLL_ACCEPT_S = 0.01          # listener connect-dir poll interval
+
+# ---- record kinds ------------------------------------------------------------
+
+KIND_HELLO = 0
+KIND_CALL = 1
+KIND_BATCH = 2
+KIND_REPLY = 3
+KIND_BATCH_REPLY = 4
+KIND_CLOSE = 5
+
+_REC = struct.Struct("<IIQ")       # size (incl. header), kind, req_id
+_SPILL_MAGIC = b"\xc5\x02"         # bulk-slot reference: namelen|name|total
+_SPILL_HEAD = struct.Struct("<H")  # segment-name length
+_SPILL_LEN = struct.Struct("<Q")   # framed-message length in the segment
+
+# Segment header: wpos and rpos on separate cache lines; one closed byte
+# per side so neither performs a read-modify-write on shared state.
+_WPOS_OFF = 0
+_RPOS_OFF = 64
+_WCLOSED_OFF = 128
+_RCLOSED_OFF = 129
+_DATA_OFF = 192
+_POS = struct.Struct("<Q")
+
+
+class RingClosed(ConnectionError):
+    """The peer closed its end of the ring (or went away)."""
+
+
+class DecodeFailure:
+    """A message that arrived intact but failed to unpickle; carries the
+    decode exception while preserving reply correlation."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class ShmConnectError(ConnectionError):
+    """Could not establish a shared-memory connection (caller may fall
+    back to another transport)."""
+
+
+def supported() -> bool:
+    """Shared-memory transport is POSIX-only (named segments + pid probes)."""
+    return os.name == "posix"
+
+
+def _untrack(shm: shared_memory.SharedMemory) -> None:
+    # Python <=3.12 registers every attach with the resource tracker, which
+    # then unlinks segments owned by *other* processes at exit (bpo-39959).
+    # We manage unlink ourselves, so take the segment out of the tracker.
+    with contextlib.suppress(Exception):
+        resource_tracker.unregister(shm._name, "shared_memory")  # noqa: SLF001
+
+
+def _unlink_quiet(name: str) -> None:
+    # shm_unlink without SharedMemory.unlink()'s resource-tracker
+    # unregister (we already untracked; a second unregister raises in the
+    # tracker daemon). ``name`` is the public segment name (no slash).
+    try:
+        import _posixshmem  # stdlib backend of shared_memory on POSIX
+        with contextlib.suppress(FileNotFoundError):
+            _posixshmem.shm_unlink("/" + name.lstrip("/"))
+    except ImportError:  # pragma: no cover - non-POSIX
+        with contextlib.suppress(Exception):
+            shared_memory.SharedMemory(name=name).unlink()
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def _doorbell_wait(ready: Callable[[], bool], *,
+                   deadline: Optional[float],
+                   give_up: Callable[[], Optional[BaseException]]) -> bool:
+    """Adaptive wait: yield-spin, then micro-sleeps capped at 500us.
+
+    The hot phase uses ``time.sleep(0)`` (sched_yield), **never** a raw
+    spin: a raw Python loop holds the GIL for a full switch interval
+    (~5ms), convoying the very thread that would satisfy the wait when
+    sender and waiter share a process. Yield-spinning keeps hot-path
+    rendezvous in the tens of microseconds while costing idle waiters
+    ~0 CPU once the sleep phase kicks in. Returns False on deadline;
+    raises whatever ``give_up`` supplies (peer-closed / peer-dead
+    detection, throttled — it may involve a pid-probe syscall)."""
+    spins = 0
+    while not ready():
+        if spins % 128 == 0:
+            exc = give_up()
+            if exc is not None:
+                raise exc
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+        spins += 1
+        if spins < 300:
+            time.sleep(0)
+        elif spins < 1500:
+            time.sleep(0.00005)
+        else:
+            time.sleep(0.0005)
+    return True
+
+
+class Ring:
+    """Single-producer single-consumer byte ring over one shm segment.
+
+    Positions are monotonic u64s; the writer publishes ``wpos`` only after
+    the record bytes are in place, the reader publishes ``rpos`` only after
+    copying a record out, so each position has exactly one writer and the
+    data path needs no cross-process lock. In-process concurrency (several
+    client threads sending) is serialized by ``_wlock``.
+    """
+
+    def __init__(self, shm: shared_memory.SharedMemory, owner: bool):
+        self._shm = shm
+        self._buf = shm.buf
+        self._cap = shm.size - _DATA_OFF
+        self._owner = owner
+        self._wlock = threading.Lock()
+        self._released = False
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create(cls, name: str, capacity: int = RING_CAPACITY) -> "Ring":
+        shm = shared_memory.SharedMemory(name=name, create=True,
+                                         size=capacity + _DATA_OFF)
+        _untrack(shm)
+        return cls(shm, owner=True)
+
+    @classmethod
+    def attach(cls, name: str) -> "Ring":
+        shm = shared_memory.SharedMemory(name=name)
+        _untrack(shm)
+        return cls(shm, owner=False)
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    # -- header accessors ----------------------------------------------------
+    def _load(self, off: int) -> int:
+        return _POS.unpack_from(self._buf, off)[0]
+
+    def _store(self, off: int, value: int) -> None:
+        _POS.pack_into(self._buf, off, value)
+
+    def close_write(self) -> None:
+        self._buf[_WCLOSED_OFF] = 1
+
+    def close_read(self) -> None:
+        self._buf[_RCLOSED_OFF] = 1
+
+    @property
+    def writer_closed(self) -> bool:
+        return self._buf[_WCLOSED_OFF] != 0
+
+    @property
+    def reader_closed(self) -> bool:
+        return self._buf[_RCLOSED_OFF] != 0
+
+    def has_backlog(self) -> bool:
+        """More records waiting? (reader-side heuristic; racy by nature)"""
+        return self._load(_WPOS_OFF) != self._load(_RPOS_OFF)
+
+    # -- data path -----------------------------------------------------------
+    def write(self, kind: int, req_id: int, chunks,
+              timeout: Optional[float] = None,
+              give_up: Optional[Callable[[], Optional[BaseException]]] = None
+              ) -> None:
+        """Gather ``chunks`` into one contiguous record. Blocks while the
+        ring is full; raises :class:`RingClosed` if the reader is gone."""
+        views = [memoryview(c).cast("B") for c in chunks]
+        total = _REC.size + sum(v.nbytes for v in views)
+        if total > self._cap:
+            raise ValueError(
+                f"record of {total} bytes exceeds ring capacity {self._cap} "
+                "(spill threshold misconfigured?)")
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def _give_up():
+            if self.reader_closed:
+                return RingClosed("ring reader closed")
+            return give_up() if give_up is not None else None
+
+        with self._wlock:
+            wpos = self._load(_WPOS_OFF)
+            while True:
+                off = wpos % self._cap
+                rem = self._cap - off
+                # Bytes needed *now*: the record, plus the tail bytes a pad
+                # (or implicit skip) would consume first.
+                need = rem + total if rem < total else total
+                if not _doorbell_wait(
+                        lambda: self._cap - (wpos - self._load(_RPOS_OFF))
+                        >= need,
+                        deadline=deadline, give_up=_give_up):
+                    raise TimeoutError("ring full")
+                if rem < _REC.size:
+                    # Tail too small even for a header: both sides skip it.
+                    wpos += rem
+                    self._store(_WPOS_OFF, wpos)
+                    continue
+                if rem < total:
+                    # Pad record: reader jumps to the wrap point.
+                    _REC.pack_into(self._buf, _DATA_OFF + off, 0, 0, 0)
+                    wpos += rem
+                    self._store(_WPOS_OFF, wpos)
+                    continue
+                pos = _DATA_OFF + off
+                _REC.pack_into(self._buf, pos, total, kind, req_id)
+                pos += _REC.size
+                for v in views:
+                    ser.copy_into(self._buf, pos, v)
+                    pos += v.nbytes
+                # Publish *after* the payload is in place.
+                self._store(_WPOS_OFF, wpos + total)
+                return
+
+    def read(self, timeout: Optional[float] = None,
+             give_up: Optional[Callable[[], Optional[BaseException]]] = None
+             ) -> Optional[tuple[int, int, bytes]]:
+        """Pop one record as ``(kind, req_id, body)``; the body is copied
+        out so ring space recycles immediately. ``None`` on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def _give_up():
+            if self.writer_closed and self._load(_WPOS_OFF) == rpos:
+                return RingClosed("ring writer closed")
+            return give_up() if give_up is not None else None
+
+        rpos = self._load(_RPOS_OFF)
+        while True:
+            if not _doorbell_wait(lambda: self._load(_WPOS_OFF) != rpos,
+                                  deadline=deadline, give_up=_give_up):
+                return None
+            off = rpos % self._cap
+            rem = self._cap - off
+            if rem < _REC.size:
+                rpos += rem
+                self._store(_RPOS_OFF, rpos)
+                continue
+            size, kind, req_id = _REC.unpack_from(self._buf, _DATA_OFF + off)
+            if size == 0:  # pad
+                rpos += rem
+                self._store(_RPOS_OFF, rpos)
+                continue
+            start = _DATA_OFF + off + _REC.size
+            body = ser.read_copy(self._buf, start, size - _REC.size)
+            rpos += size
+            self._store(_RPOS_OFF, rpos)
+            return kind, req_id, body
+
+    # -- lifecycle -----------------------------------------------------------
+    def release(self, unlink: bool = False) -> None:
+        """Drop our mapping (and the name, if ``unlink``). Idempotent."""
+        if self._released:
+            return
+        self._released = True
+        self._buf = None  # release the exported memoryview before close()
+        name = self._shm.name
+        with contextlib.suppress(Exception):
+            self._shm.close()
+        if unlink:
+            _unlink_quiet(name)
+
+
+class Slot:
+    """One-message side segment for bulk payloads, written at a fixed
+    offset (hot cache region, unlike cycling through a big ring).
+
+    ``seq_written`` (writer-owned, at :data:`_WPOS_OFF`) and
+    ``seq_consumed`` (reader-owned, at :data:`_RPOS_OFF`) implement a
+    single-entry handshake: the writer waits until the previous message
+    was copied out, fills the data region, publishes ``seq_written``, and
+    only then emits the control-ring reference, so the reader never sees
+    a half-written slot.
+    """
+
+    def __init__(self, shm: shared_memory.SharedMemory):
+        self._shm = shm
+        self._buf = shm.buf
+        self.capacity = shm.size - _DATA_OFF
+        self._released = False
+
+    @classmethod
+    def create(cls, name: str, capacity: int) -> "Slot":
+        shm = shared_memory.SharedMemory(name=name, create=True,
+                                         size=capacity + _DATA_OFF)
+        _untrack(shm)
+        return cls(shm)
+
+    @classmethod
+    def attach(cls, name: str) -> "Slot":
+        shm = shared_memory.SharedMemory(name=name)
+        _untrack(shm)
+        return cls(shm)
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    def _load(self, off: int) -> int:
+        return _POS.unpack_from(self._buf, off)[0]
+
+    @property
+    def free(self) -> bool:
+        return self._load(_WPOS_OFF) == self._load(_RPOS_OFF)
+
+    def write_frames(self, frames, timeout: Optional[float] = None,
+                     give_up: Optional[Callable] = None) -> None:
+        """Wait for the slot to be free, then gather ``frames`` into it."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+
+        def _give_up():
+            if self._buf[_RCLOSED_OFF] != 0:
+                return RingClosed("slot reader closed")
+            return give_up() if give_up is not None else None
+
+        if not _doorbell_wait(lambda: self.free, deadline=deadline,
+                              give_up=_give_up):
+            raise TimeoutError("bulk slot still in use")
+        ser.write_framed_into(memoryview(self._buf)[_DATA_OFF:], frames)
+        _POS.pack_into(self._buf, _WPOS_OFF, self._load(_WPOS_OFF) + 1)
+
+    def unpublish(self) -> None:
+        """Roll back the last ``write_frames`` (writer-side only, and only
+        before its control-ring reference was emitted — the reader cannot
+        have touched it). Keeps a failed send from poisoning the slot."""
+        _POS.pack_into(self._buf, _WPOS_OFF, self._load(_WPOS_OFF) - 1)
+
+    def consume(self, total: int) -> Any:
+        """Copy the current message out, free the slot, decode."""
+        data = ser.read_copy(self._buf, _DATA_OFF, total)
+        _POS.pack_into(self._buf, _RPOS_OFF, self._load(_WPOS_OFF))
+        return ser.loads(data)
+
+    def close_read(self) -> None:
+        self._buf[_RCLOSED_OFF] = 1
+
+    def release(self, unlink: bool = False) -> None:
+        if self._released:
+            return
+        self._released = True
+        self._buf = None
+        name = self._shm.name
+        with contextlib.suppress(Exception):
+            self._shm.close()
+        if unlink:
+            _unlink_quiet(name)
+
+
+# ---- one direction: control ring + lazy bulk slot ---------------------------
+
+class Chan:
+    """One direction of a connection.
+
+    Small messages gather straight into the control ring. Larger ones go
+    through the direction's *bulk slot* (see :class:`Slot`) — created
+    lazily by the writer, reused for the connection's lifetime, regrown
+    under a fresh versioned name when a bigger message arrives. A tiny
+    ``_SPILL_MAGIC`` reference (segment name + length) enters the control
+    ring; the reader attaches the named slot (cached) and copies the
+    message out. The per-direction send lock keeps slot fills and control
+    records in lockstep order.
+    """
+
+    def __init__(self, ctrl: Ring, bulk_name: str, writer: bool):
+        self._ctrl = ctrl
+        self._bulk_name = bulk_name
+        self._writer = writer
+        self._slot: Optional[Slot] = None
+        self._slot_version = 0
+        self._slots_attached: dict[str, Slot] = {}
+        self._lock = threading.Lock()
+
+    # -- writer side ---------------------------------------------------------
+    def _writer_slot(self, total: int, timeout, give_up) -> Slot:
+        if self._slot is None or self._slot.capacity < total:
+            if self._slot is not None:
+                # All refs to the old slot were consumed (it is free by
+                # the time we grow), so dropping the name is safe; the
+                # reader's cached attachment stays valid until released.
+                wait_s = 30.0 if timeout is None else timeout
+                if not _doorbell_wait(lambda: self._slot.free,
+                                      deadline=time.monotonic() + wait_s,
+                                      give_up=give_up or (lambda: None)):
+                    raise TimeoutError("bulk slot still in use")
+                self._slot.release(unlink=True)
+            self._slot_version += 1
+            self._slot = Slot.create(
+                f"{self._bulk_name}v{self._slot_version}",
+                int(total * SLOT_HEADROOM))
+        return self._slot
+
+    def send(self, kind: int, req_id: int, obj: Any,
+             timeout: Optional[float] = None, give_up=None) -> None:
+        frames = ser.encode_frames(obj)
+        total = ser.framed_size(frames)
+        with self._lock:
+            if total <= SPILL_THRESHOLD:
+                self._ctrl.write(kind, req_id, ser.framed_chunks(frames),
+                                 timeout=timeout, give_up=give_up)
+                return
+            slot = self._writer_slot(total, timeout, give_up)
+            slot.write_frames(frames, timeout=timeout, give_up=give_up)
+            name_b = slot.name.encode()
+            ref = (_SPILL_MAGIC + _SPILL_HEAD.pack(len(name_b)) + name_b
+                   + _SPILL_LEN.pack(total))
+            try:
+                self._ctrl.write(kind, req_id, [ref], timeout=timeout,
+                                 give_up=give_up)
+            except BaseException:
+                # The reference never entered the ring: roll the slot
+                # publish back so the next send doesn't wait forever on a
+                # message nobody will ever consume.
+                slot.unpublish()
+                raise
+
+    # -- reader side ---------------------------------------------------------
+    def recv(self, timeout: Optional[float] = None, give_up=None
+             ) -> Optional[tuple[int, int, Any]]:
+        """Pop and decode one message. A payload that fails to decode
+        (e.g. a class importable only on the peer) comes back as a
+        :class:`DecodeFailure` so the request id is not lost — the caller
+        can still correlate an error reply."""
+        rec = self._ctrl.read(timeout=timeout, give_up=give_up)
+        if rec is None:
+            return None
+        kind, req_id, body = rec
+        try:
+            obj = self._decode(req_id, body, give_up)
+        except RingClosed:
+            raise
+        except BaseException as exc:  # noqa: BLE001
+            obj = DecodeFailure(exc)
+        return kind, req_id, obj
+
+    def _decode(self, req_id: int, body: bytes, give_up) -> Any:
+        if bytes(body[:2]) == _SPILL_MAGIC:
+            (name_len,) = _SPILL_HEAD.unpack_from(body, 2)
+            name = bytes(body[4:4 + name_len]).decode()
+            (total,) = _SPILL_LEN.unpack_from(body, 4 + name_len)
+            slot = self._slots_attached.get(name)
+            if slot is None:
+                slot = Slot.attach(name)
+                self._slots_attached[name] = slot
+            # The slot was filled and published before its control-ring
+            # reference, so the message is already there.
+            return slot.consume(total)
+        return ser.loads(body)
+
+    # -- lifecycle -----------------------------------------------------------
+    def close_write(self) -> None:
+        with contextlib.suppress(Exception):
+            self._ctrl.close_write()
+
+    def close_read(self) -> None:
+        with contextlib.suppress(Exception):
+            self._ctrl.close_read()
+        for slot in self._slots_attached.values():
+            with contextlib.suppress(Exception):
+                slot.close_read()  # unblock a writer waiting on the slot
+
+    @property
+    def ctrl(self) -> Ring:
+        return self._ctrl
+
+    def release(self, unlink: bool = False) -> None:
+        self._ctrl.release(unlink=unlink)
+        if self._slot is not None:
+            self._slot.release(unlink=True)  # writer owns the slot name
+            self._slot = None
+        for slot in self._slots_attached.values():
+            slot.release()
+        self._slots_attached.clear()
+
+
+def _sweep_segments(prefix: str) -> None:
+    """Best-effort unlink of leftover segments (crashed peer / unread
+    spills). POSIX shm appears under /dev/shm on Linux."""
+    for path in glob.glob(f"/dev/shm/{prefix}*"):
+        with contextlib.suppress(Exception):
+            _unlink_quiet(os.path.basename(path))
+
+
+# ---- rendezvous --------------------------------------------------------------
+
+def _root_dir() -> str:
+    return os.path.join(tempfile.gettempdir(), "courier-shm")
+
+
+def rendezvous_dir(name: str) -> str:
+    return os.path.join(_root_dir(), name)
+
+
+def probe(name: str) -> str:
+    """Listener state: ``"ready"`` | ``"stale"`` (dead pid / wrong host /
+    unreadable meta) | ``"absent"``."""
+    meta_path = os.path.join(rendezvous_dir(name), "listener.json")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except FileNotFoundError:
+        return "absent"
+    except Exception:
+        return "stale"
+    if meta.get("host") != socket.gethostname():
+        return "stale"
+    pid = meta.get("pid")
+    if not isinstance(pid, int) or not _pid_alive(pid):
+        return "stale"
+    return "ready"
+
+
+def cleanup(name: str) -> None:
+    """Remove a service's rendezvous directory and leftover segments —
+    used by launchers tearing down hard-killed nodes."""
+    d = rendezvous_dir(name)
+    with contextlib.suppress(Exception):
+        for fn in os.listdir(d):
+            with contextlib.suppress(OSError):
+                os.unlink(os.path.join(d, fn))
+        os.rmdir(d)
+
+
+# ---- server side -------------------------------------------------------------
+
+class _ServerConn:
+    """One accepted client: a reader thread draining the request channel
+    and a reply channel shared by the handler pool."""
+
+    def __init__(self, listener: "ShmListener", conn_id: str,
+                 req: Ring, rep: Ring, client_pid: int):
+        self._listener = listener
+        self._conn_id = conn_id
+        self._in = Chan(req, bulk_name=f"{conn_id}qb", writer=False)
+        self._out = Chan(rep, bulk_name=f"{conn_id}rb", writer=True)
+        self._client_pid = client_pid
+        self._thread = threading.Thread(
+            target=self._serve, name=f"courier-shm-conn/{conn_id}",
+            daemon=True)
+
+    def start(self) -> None:
+        self._out.ctrl.write(KIND_HELLO, 0, [b""])
+        self._thread.start()
+
+    def _client_gone(self) -> Optional[BaseException]:
+        # Wakes reply writers blocked on a full ring whose client was
+        # SIGKILLed (a dead client never sets its reader-closed flag).
+        if not _pid_alive(self._client_pid):
+            return RingClosed("client process died")
+        return None
+
+    def _reply(self, kind: int, req_id: int, obj: Any) -> None:
+        try:
+            self._out.send(kind, req_id, obj, give_up=self._client_gone)
+        except RingClosed:
+            pass  # client left; nothing to deliver the reply to
+        except Exception:
+            # Unpicklable result/exception: degrade per-status, exactly
+            # like the gRPC path's encode_reply_error fallbacks.
+            with contextlib.suppress(RingClosed):
+                self._out.send(kind, req_id, _degrade(kind, obj),
+                               give_up=self._client_gone)
+
+    def _run_call(self, req_id: int, call: tuple) -> None:
+        lst = self._listener
+        try:
+            # handler_init inside the try: its failure must become an
+            # error reply, not a silently-dropped pool future that leaves
+            # the client waiting forever.
+            if lst.handler_init is not None:
+                lst.handler_init()
+            method, args, kwargs = call
+            status = ser.make_ok_status(lst.invoke(method, args, kwargs))
+        except BaseException as exc:  # noqa: BLE001 - ship any failure back
+            status = ser.make_error_status(exc)
+        self._reply(KIND_REPLY, req_id, status)
+
+    def _run_batch(self, req_id: int, calls: list) -> None:
+        lst = self._listener
+        try:
+            if lst.handler_init is not None:
+                lst.handler_init()
+        except BaseException as exc:  # noqa: BLE001 - whole-batch failure
+            self._reply(KIND_REPLY, req_id, ser.make_error_status(exc))
+            return
+        statuses = []
+        for method, args, kwargs in calls:
+            # Per-call isolation, statuses in request order (same contract
+            # as /courier/BatchCall).
+            try:
+                statuses.append(
+                    ser.make_ok_status(lst.invoke(method, args, kwargs)))
+            except BaseException as exc:  # noqa: BLE001
+                statuses.append(ser.make_error_status(exc))
+        self._reply(KIND_BATCH_REPLY, req_id, statuses)
+
+    def _serve(self) -> None:
+        try:
+            while not self._listener.stopped:
+                try:
+                    # Decode happens here (slot consumption must follow
+                    # control-ring order); only the invoke may run pooled.
+                    rec = self._in.recv(timeout=0.2)
+                except RingClosed:
+                    return
+                if rec is None:
+                    if not _pid_alive(self._client_pid):
+                        return  # client died without a CLOSE
+                    continue
+                kind, req_id, obj = rec
+                if kind == KIND_CLOSE:
+                    return
+                if isinstance(obj, DecodeFailure):
+                    self._reply(KIND_REPLY, req_id,
+                                ser.make_error_status(obj.exc))
+                    continue
+                if kind == KIND_CALL:
+                    runner = self._run_call
+                elif kind == KIND_BATCH:
+                    runner = self._run_batch
+                else:
+                    continue
+                # A lone request runs inline: on small hosts a pool
+                # hand-off costs a wake AND leaves this thread spinning
+                # next to the worker. A client with pipelined backlog
+                # keeps pool concurrency (its calls must not serialize
+                # behind one long handler). Caveat: a handler that blocks
+                # until a *later* request from the same client arrives
+                # can stall its own connection — don't write services
+                # like that (other clients' connections are unaffected).
+                if self._in.ctrl.has_backlog():
+                    try:
+                        self._listener.pool.submit(runner, req_id, obj)
+                    except RuntimeError:
+                        return  # listener stopped the pool mid-accept
+                else:
+                    runner(req_id, obj)
+        finally:
+            self._out.close_write()
+            self._in.close_read()
+            self._in.release()
+            self._out.release()
+            _sweep_segments(f"{self._conn_id}")
+            self._listener.forget(self)
+
+
+def _degrade(kind: int, obj: Any) -> Any:
+    """Build a picklable stand-in for a reply that failed to encode."""
+    def one(status):
+        try:
+            ser.encode_frames(status)
+            return status
+        except Exception:
+            if status[0] == "ok":
+                return ("err", ser.RemoteError(
+                    f"result of type {type(status[1]).__name__} is not "
+                    "serializable"), "")
+            return ("err", ser.RemoteError(repr(status[1])), status[2])
+    if kind == KIND_BATCH_REPLY:
+        return [one(s) for s in obj]
+    return one(obj)
+
+
+class ShmListener:
+    """Accepts shm connections for one service name, alongside whatever
+    other transports the server runs. ``invoke`` is the server's dispatch
+    (method, args, kwargs) -> value; ``handler_init`` runs at the top of
+    every request on the handling thread (same contract as CourierServer).
+    """
+
+    def __init__(self, name: str, invoke: Callable[[str, tuple, dict], Any],
+                 handler_init: Optional[Callable[[], None]] = None,
+                 max_workers: int = 16):
+        if not supported():  # pragma: no cover - POSIX-only guard
+            raise ShmConnectError("shm transport requires POSIX")
+        self.name = name
+        self.invoke = invoke
+        self.handler_init = handler_init
+        self.stopped = False
+        self.pool = futures.ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="courier-shm-srv")
+        self._dir = rendezvous_dir(name)
+        self._conns: list[_ServerConn] = []
+        self._conns_lock = threading.Lock()
+        self._accept_thread: Optional[threading.Thread] = None
+        os.makedirs(self._dir, exist_ok=True)
+        meta = {"host": socket.gethostname(), "pid": os.getpid(),
+                "version": 1}
+        tmp = os.path.join(self._dir, f".meta.{os.getpid()}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, os.path.join(self._dir, "listener.json"))
+
+    @property
+    def endpoint(self) -> str:
+        return f"shm://{self.name}"
+
+    def start(self) -> None:
+        if self._accept_thread is not None:
+            return
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"courier-shm-accept/{self.name}",
+            daemon=True)
+        self._accept_thread.start()
+
+    def _accept_one(self, path: str) -> None:
+        try:
+            with open(path) as f:
+                req = json.load(f)
+            os.unlink(path)
+            conn = _ServerConn(self, req["conn"],
+                               req=Ring.attach(req["req"]),
+                               rep=Ring.attach(req["rep"]),
+                               client_pid=int(req["pid"]))
+        except Exception:  # malformed/raced connect file: drop it
+            with contextlib.suppress(OSError):
+                os.unlink(path)
+            return
+        with self._conns_lock:
+            self._conns.append(conn)
+        conn.start()
+
+    def _accept_loop(self) -> None:
+        while not self.stopped:
+            try:
+                pending = sorted(
+                    fn for fn in os.listdir(self._dir)
+                    if fn.endswith(".connect"))
+            except FileNotFoundError:
+                return  # rendezvous dir removed under us: stop accepting
+            for fn in pending:
+                self._accept_one(os.path.join(self._dir, fn))
+            time.sleep(_POLL_ACCEPT_S)
+
+    def forget(self, conn: _ServerConn) -> None:
+        with self._conns_lock:
+            if conn in self._conns:
+                self._conns.remove(conn)
+
+    def stop(self) -> None:
+        if self.stopped:
+            return
+        self.stopped = True
+        cleanup(self.name)  # unadvertise first: no new connects
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
+            # Wake blocked clients; the conn thread may be releasing the
+            # ring concurrently, which is fine — the client also watches
+            # our pid.
+            conn._out.close_write()  # noqa: SLF001
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)
+        self.pool.shutdown(wait=False)
+
+
+# ---- client side -------------------------------------------------------------
+
+class ClientConnection:
+    """The client half of one shm connection: creates the rings, performs
+    the rendezvous handshake, then sends records / receives replies."""
+
+    def __init__(self, name: str, req: Ring, rep: Ring, conn_id: str,
+                 server_pid: int):
+        self.name = name
+        self._out = Chan(req, bulk_name=f"{conn_id}qb", writer=True)
+        self._in = Chan(rep, bulk_name=f"{conn_id}rb", writer=False)
+        self._conn_id = conn_id
+        self._server_pid = server_pid
+        self._closed = False
+
+    @classmethod
+    def connect(cls, name: str, wait: Optional[float] = None
+                ) -> "ClientConnection":
+        if not supported():
+            raise ShmConnectError("shm transport requires POSIX")
+        wait = CONNECT_WAIT_S if wait is None else wait
+        deadline = time.monotonic() + wait
+        # Wait for the listener to advertise (launch is asynchronous); a
+        # stale advertisement (dead pid) fails immediately so callers can
+        # fall back instead of hanging on a crashed server's leftovers.
+        while True:
+            state = probe(name)
+            if state == "ready":
+                break
+            if state == "stale":
+                raise ShmConnectError(
+                    f"shm listener for {name!r} is stale (server crashed?)")
+            if time.monotonic() >= deadline:
+                raise ShmConnectError(
+                    f"shm listener for {name!r} did not come up within "
+                    f"{wait:.1f}s")
+            time.sleep(0.005)
+        d = rendezvous_dir(name)
+        try:
+            with open(os.path.join(d, "listener.json")) as f:
+                server_pid = int(json.load(f)["pid"])
+        except (OSError, ValueError, KeyError) as exc:
+            # The listener can unadvertise between probe() and this read;
+            # surface it as a connect failure so callers fall back.
+            raise ShmConnectError(
+                f"shm listener for {name!r} disappeared during connect: "
+                f"{exc!r}") from exc
+        conn_id = f"cur{os.getpid():x}{uuid.uuid4().hex[:8]}"
+        req = Ring.create(f"{conn_id}q")
+        rep = Ring.create(f"{conn_id}r")
+        try:
+            spec = {"conn": conn_id, "req": req.name, "rep": rep.name,
+                    "pid": os.getpid()}
+            tmp = os.path.join(d, f".{conn_id}.tmp")
+            with open(tmp, "w") as f:
+                json.dump(spec, f)
+            os.replace(tmp, os.path.join(d, f"{conn_id}.connect"))
+            # The HELLO record doubles as the accept ack.
+            def _server_died():
+                if not _pid_alive(server_pid):
+                    return ShmConnectError(
+                        f"shm listener for {name!r} died during handshake")
+                return None
+            rec = rep.read(timeout=ACCEPT_WAIT_S, give_up=_server_died)
+            if rec is None or rec[0] != KIND_HELLO:
+                raise ShmConnectError(
+                    f"shm listener for {name!r} did not accept within "
+                    f"{ACCEPT_WAIT_S:.1f}s")
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(os.path.join(d, f"{conn_id}.connect"))
+            req.release(unlink=True)
+            rep.release(unlink=True)
+            raise
+        return cls(name, req, rep, conn_id, server_pid)
+
+    # -- data path -----------------------------------------------------------
+    def send(self, kind: int, req_id: int, obj: Any,
+             timeout: Optional[float] = None) -> None:
+        def _server_died():
+            if not _pid_alive(self._server_pid):
+                return RingClosed("server process died")
+            return None
+        self._out.send(kind, req_id, obj, timeout=timeout,
+                       give_up=_server_died)
+
+    def recv(self, timeout: Optional[float] = None
+             ) -> Optional[tuple[int, int, Any]]:
+        return self._in.recv(timeout=timeout)
+
+    def peer_alive(self) -> bool:
+        return _pid_alive(self._server_pid) and not self._in.ctrl.writer_closed
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with contextlib.suppress(Exception):
+            self._out.ctrl.write(KIND_CLOSE, 0, [b""], timeout=0.2)
+        self._out.close_write()
+        self._in.close_read()
+
+    def release(self) -> None:
+        """Unlink the rings (the client created both control rings) plus
+        any bulk/one-off segments left under this connection's prefix."""
+        self._out.release(unlink=True)
+        self._in.release(unlink=True)
+        _sweep_segments(self._conn_id)

@@ -17,13 +17,15 @@ import multiprocessing as mp
 import os
 import threading
 import time
+import uuid
 from typing import Optional
 
 import cloudpickle
 
+from repro.core.courier import shm as courier_shm
 from repro.core.fault import NodeFailure
 from repro.core.launchers.base import Launcher
-from repro.core.launchers.thread import pick_free_port
+from repro.core.launchers.thread import PortReservation
 from repro.core.nodes.base import Executable, Node, WorkerContext
 
 
@@ -59,10 +61,24 @@ class ProcessLauncher(Launcher):
         self._monitor_interval_s = monitor_interval_s
         self._monitor: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        self._reservations: list[PortReservation] = []
+        self._shm_names: list[str] = []
 
     # -- addresses ------------------------------------------------------------
     def _assign_address(self, node: Node, index: int) -> str:
-        return f"grpc://127.0.0.1:{pick_free_port()}"
+        # Dual endpoint: same-host peers connect over the shared-memory
+        # ring (shm.py); anything that can't — no listener yet after the
+        # connect grace, a stale listener from a crashed node, a remote
+        # host — falls back to gRPC. The port reservation is held until
+        # terminate(), so the advertised port is the one the child binds.
+        res = PortReservation()
+        self._reservations.append(res)
+        grpc_ep = f"grpc://127.0.0.1:{res.port}"
+        if not courier_shm.supported():  # pragma: no cover - non-POSIX
+            return grpc_ep
+        name = f"lp{os.getpid():x}u{index}x{uuid.uuid4().hex[:8]}"
+        self._shm_names.append(name)
+        return f"shm://{name}+{grpc_ep}"
 
     # -- execution ---------------------------------------------------------------
     def _spawn(self, managed: _Managed) -> None:
@@ -124,6 +140,12 @@ class ProcessLauncher(Launcher):
 
     # -- lifecycle -----------------------------------------------------------------
     def wait(self, timeout: Optional[float] = None) -> bool:
+        done = self._wait_inner(timeout)
+        if done:
+            self._release_resources()
+        return done
+
+    def _wait_inner(self, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             # Completion is judged by the monitor's m.done marks so that a
@@ -157,6 +179,15 @@ class ProcessLauncher(Launcher):
     def stop(self) -> None:
         self._stop_event.set()
 
+    def _release_resources(self) -> None:
+        for res in self._reservations:
+            res.release()
+        self._reservations.clear()
+        # Hard-killed children never ran their listener teardown: sweep
+        # their rendezvous dirs so later clients see "absent", not "stale".
+        for name in self._shm_names:
+            courier_shm.cleanup(name)
+
     def terminate(self) -> None:
         """Hard kill (used by tests' teardown)."""
         self._stop_event.set()
@@ -166,3 +197,4 @@ class ProcessLauncher(Launcher):
         for m in self._managed:
             if m.process is not None:
                 m.process.join(timeout=2.0)
+        self._release_resources()

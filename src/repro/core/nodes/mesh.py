@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
-from repro.core.addressing import Address
+from repro.core.addressing import Address, parse_endpoint
 from repro.core.handles import Handle, collect_handles
 from repro.core.nodes.base import Executable, Node, WorkerContext, set_current_context
 from repro.core.nodes.python import CourierHandle, _construct
@@ -58,25 +58,31 @@ class _MeshExecutable(Executable):
         obj = _construct(self._cls, self._args,
                          dict(self._kwargs, mesh=mesh))
         endpoint = self._address.endpoint
+        # Dual endpoints (shm://name+grpc://host:port from ProcessLauncher)
+        # serve every advertised scheme, same as _CourierExecutable.
+        parts = parse_endpoint(endpoint)
         server = None
         try:
-            if endpoint.startswith("inproc://"):
-                courier.inprocess.register(endpoint[len("inproc://"):], obj)
-            else:
-                hostport = endpoint[len("grpc://"):]
-                host, port = hostport.rsplit(":", 1)
+            if parts.inproc is not None:
+                courier.inprocess.register(parts.inproc, obj)
+            if parts.grpc is not None:
+                host, port = parts.grpc.rsplit(":", 1)
                 server = courier.CourierServer(
-                    obj, port=int(port), host=host,
+                    obj, port=int(port), host=host, shm_name=parts.shm,
                     handler_init=lambda: set_current_context(context))
                 server.start()
+            elif parts.shm is not None:
+                raise ValueError(
+                    f"shm endpoint {endpoint!r} needs a grpc:// fallback "
+                    "component (launchers always emit dual endpoints)")
             run_fn = getattr(obj, "run", None)
             if callable(run_fn):
                 run_fn()
             else:
                 context.wait_for_stop()
         finally:
-            if endpoint.startswith("inproc://"):
-                courier.inprocess.unregister(endpoint[len("inproc://"):])
+            if parts.inproc is not None:
+                courier.inprocess.unregister(parts.inproc)
             if server is not None:
                 server.stop()
 

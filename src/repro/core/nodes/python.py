@@ -18,7 +18,7 @@ import logging
 from typing import Any, Optional
 
 from repro.core import courier
-from repro.core.addressing import Address
+from repro.core.addressing import Address, parse_endpoint
 from repro.core.handles import Handle, collect_handles, map_handles
 from repro.core.nodes.base import Executable, Node, WorkerContext, set_current_context
 
@@ -69,21 +69,26 @@ class _CourierExecutable(Executable):
         set_current_context(context)
         obj = _construct(self._cls, self._args, self._kwargs)
         endpoint = self._address.endpoint
+        # A "+"-joined endpoint advertises several transports for the same
+        # service (e.g. shm://name+grpc://host:port from ProcessLauncher):
+        # serve all of them; clients pick the first viable scheme.
+        parts = parse_endpoint(endpoint)
         server = None
         try:
-            if endpoint.startswith("inproc://"):
-                courier.inprocess.register(endpoint[len("inproc://"):], obj)
-            elif endpoint.startswith("grpc://"):
-                hostport = endpoint[len("grpc://"):]
-                host, port = hostport.rsplit(":", 1)
+            if parts.inproc is not None:
+                courier.inprocess.register(parts.inproc, obj)
+            if parts.grpc is not None:
+                host, port = parts.grpc.rsplit(":", 1)
                 # handler_init: RPC handler threads get this node's context,
                 # so service methods can call lp.stop_program() remotely.
                 server = courier.CourierServer(
-                    obj, port=int(port), host=host,
+                    obj, port=int(port), host=host, shm_name=parts.shm,
                     handler_init=lambda: set_current_context(context))
                 server.start()
-            else:
-                raise ValueError(f"unknown endpoint scheme {endpoint!r}")
+            elif parts.shm is not None:
+                raise ValueError(
+                    f"shm endpoint {endpoint!r} needs a grpc:// fallback "
+                    "component (launchers always emit dual endpoints)")
 
             run_fn = getattr(obj, "run", None)
             if callable(run_fn):
@@ -91,8 +96,8 @@ class _CourierExecutable(Executable):
             else:
                 context.wait_for_stop()
         finally:
-            if endpoint.startswith("inproc://"):
-                courier.inprocess.unregister(endpoint[len("inproc://"):])
+            if parts.inproc is not None:
+                courier.inprocess.unregister(parts.inproc)
             if server is not None:
                 server.stop()
 

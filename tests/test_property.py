@@ -49,6 +49,39 @@ def test_serialization_roundtrip_arrays(shape, dtype):
     assert out.dtype == arr.dtype
 
 
+@given(json_like,
+       st.lists(st.integers(1, 4096), min_size=0, max_size=4),
+       st.integers(0, 64))
+@settings(max_examples=50, deadline=None)
+def test_scatter_gather_encode_matches_dumps(obj, arr_sizes, slack):
+    """The shm ring's scatter-gather path (encode_frames + framed_size +
+    write_framed_into) must produce byte-for-byte what ``dumps`` joins,
+    for any payload and any buffer slack, and round-trip through loads."""
+    payload = {"obj": obj,
+               "arrays": [np.arange(n, dtype=np.float32) for n in arr_sizes]}
+    frames = ser.encode_frames(payload)
+    size = ser.framed_size(frames)
+    buf = bytearray(size + slack)
+    written = ser.write_framed_into(buf, frames)
+    assert written == size
+    assert bytes(buf[:written]) == ser.dumps(payload)
+    out = ser.loads(bytes(buf[:written]))
+    assert _tuplify(out["obj"]) == _tuplify(obj)
+    for got, n in zip(out["arrays"], arr_sizes):
+        np.testing.assert_array_equal(got, np.arange(n, dtype=np.float32))
+
+
+@given(st.integers(0, 4096))
+@settings(max_examples=20, deadline=None)
+def test_write_framed_into_rejects_short_buffers(deficit):
+    frames = ser.encode_frames({"x": np.zeros(1024, np.float32)})
+    size = ser.framed_size(frames)
+    if deficit == 0 or deficit > size:
+        return
+    with pytest.raises(ValueError, match="needs"):
+        ser.write_framed_into(bytearray(size - deficit), frames)
+
+
 # ---------------------------------------------------------------------------
 # RestartPolicy invariants
 # ---------------------------------------------------------------------------

@@ -32,13 +32,24 @@ class Service:
         return threading.current_thread().name
 
 
-@pytest.fixture(params=["grpc", "inproc"])
+@pytest.fixture(params=["grpc", "inproc", "shm"])
 def client(request):
     svc = Service()
     if request.param == "grpc":
         srv = CourierServer(svc)
         srv.start()
         cli = courier.client_for(srv.endpoint)
+        yield cli
+        cli.close()
+        srv.stop()
+    elif request.param == "shm":
+        import os
+        import time
+        name = f"tt{os.getpid():x}{time.monotonic_ns() & 0xffffff:x}"
+        srv = CourierServer(svc, shm_name=name)
+        srv.start()
+        cli = courier.client_for(f"shm://{name}+{srv.endpoint}")
+        assert isinstance(cli.transport, courier.ShmTransport)
         yield cli
         cli.close()
         srv.stop()
