@@ -6,14 +6,17 @@ and the shared-memory ring (``shm://``) — with a payload sweep (1 KiB ->
 8 MiB), batched RPC amortization, and the pre-refactor ("legacy") wire
 format as a gRPC A/B baseline.
 
-The cross-process arms (``rpc/shm/*``, ``rpc/grpc/*``,
-``rpc/grpc_legacy/*``) run against ONE forked server process that serves
-both transports at once — the same-host process-launcher topology the shm
-transport exists for — and are measured *paired*: the arms alternate
-chunk-by-chunk per payload so they see identical background conditions.
-(Before the shm transport landed, rpc/grpc/* was measured against an
-in-process loopback server; absolute values are not comparable across
-that change.)
+The cross-process arms (``rpc/shm/*``, ``rpc/shm_copy/*``,
+``rpc/grpc/*``, ``rpc/grpc_legacy/*``) run against ONE forked server
+process that serves both transports at once — the same-host
+process-launcher topology the shm transport exists for — and are
+measured *paired*: the arms alternate chunk-by-chunk per payload so they
+see identical background conditions. ``rpc/shm_copy`` is the PR-2
+receive path (one full copy-out per large message on each side) over the
+same connection machinery, so shm vs shm_copy isolates exactly what the
+zero-copy slot-pool receive buys. (Before the shm transport landed,
+rpc/grpc/* was measured against an in-process loopback server; absolute
+values are not comparable across that change.)
 """
 
 from __future__ import annotations
@@ -27,6 +30,7 @@ import numpy as np
 from repro.core import courier
 from repro.core.courier.client import CourierClient
 from repro.core.courier.server import CourierServer
+from repro.core.courier.transport import ShmTransport
 
 
 class Echo:
@@ -151,6 +155,8 @@ def run(emit):
     grpc_ep = endpoint_q.get(timeout=30)
     try:
         with courier.client_for(f"shm://{shm_name}+{grpc_ep}") as s, \
+                CourierClient(None, transport=ShmTransport(
+                    shm_name, zero_copy=False)) as sc, \
                 courier.client_for(grpc_ep) as g, \
                 CourierClient(grpc_ep, wire_format="legacy") as gl:
             assert isinstance(s.transport, courier.ShmTransport)
@@ -164,9 +170,10 @@ def run(emit):
                  "pre-refactor wire format")
             _paired_sweep(
                 emit,
-                [("rpc/shm", s.echo), ("rpc/grpc", g.echo),
-                 ("rpc/grpc_legacy", gl.echo)],
-                derived={"rpc/shm": "ring + bulk slot",
+                [("rpc/shm", s.echo), ("rpc/shm_copy", sc.echo),
+                 ("rpc/grpc", g.echo), ("rpc/grpc_legacy", gl.echo)],
+                derived={"rpc/shm": "zero-copy slot-pool receive",
+                         "rpc/shm_copy": "PR-2 copy-out receive (A/B)",
                          "rpc/grpc": "paired vs shm"})
             # Batched RPC: 64 pings in one frame vs 64 single round trips.
             batch = [("ping", (), {})] * 64

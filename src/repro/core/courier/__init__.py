@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from repro.core.courier import inprocess, shm
 from repro.core.courier.client import CourierClient
-from repro.core.courier.serialization import RemoteError
+from repro.core.courier.serialization import RemoteError, materialize
 from repro.core.courier.server import CourierServer
 from repro.core.courier.transport import (GrpcTransport, InProcTransport,
                                           ShmTransport, Transport,
@@ -43,5 +43,6 @@ __all__ = [
     "client_for",
     "inprocess",
     "make_transport",
+    "materialize",
     "shm",
 ]

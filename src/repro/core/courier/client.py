@@ -14,6 +14,14 @@ API surface::
     client.batch_call([(m, args, kwargs), ...])       # N calls, one frame
     client.futures.batch_call([...])                  # async batch
     with CourierClient(ep) as c: ...                  # scoped channel use
+
+Results that contain arrays may be zero-copy: over the shm transport a
+large reply's arrays are read-only views aliasing a shared-memory slot,
+pinned by a lease that returns the slot to the sender's pool when the
+result is garbage-collected. Drop results promptly, or detach them with
+``courier.materialize(result)`` before retaining them long-term (a
+handful of long-lived results otherwise starves the server's reply
+pool). See courier/README.md, "The lease free protocol".
 """
 
 from __future__ import annotations

@@ -22,11 +22,17 @@ blob — the pre-frames legacy format, kept for wire compatibility and as
 the benchmark baseline (see ``legacy_dumps``). ``loads`` transparently
 decodes both.
 
-Transports that own a writable destination buffer (the shm ring / bulk
-slots) skip the ``bytes`` join entirely via the scatter-gather API:
+Transports that own a writable destination buffer (the shm ring / slot
+pools) skip the ``bytes`` join entirely via the scatter-gather API:
 ``encode_frames`` / ``framed_size`` / ``write_framed_into`` /
 ``framed_chunks`` / ``encode_call_into`` — each array payload is copied
 exactly once, source array -> destination memory.
+
+On the receive side, ``loads_owned`` decodes a framed message *in place*
+over transport-owned memory (an shm pool slot) and threads an owner (the
+slot's lease) under every decoded array, so the transport can reuse the
+memory exactly when the consumer drops the message. ``owner_of`` /
+``materialize`` let consumers inspect and detach such views.
 """
 
 from __future__ import annotations
@@ -69,18 +75,37 @@ def _jax_array_type():
     return _JAX_ARRAY_TYPE
 
 
+def _as_readonly(arr: np.ndarray) -> np.ndarray:
+    view = arr.view()
+    view.flags.writeable = False
+    return view
+
+
 class _CourierPickler(cloudpickle.CloudPickler):
     """cloudpickle plus device-array reduction.
 
     JAX arrays are reduced through ``np.asarray`` so device buffers never
     enter the stream; under protocol 5 numpy then emits the payload as an
     out-of-band ``PickleBuffer`` which the frame encoder ships uncopied.
+
+    Array payloads are reduced through a *read-only view* on purpose: a
+    readonly source makes the pickler emit the ``READONLY_BUFFER`` opcode,
+    and on decode that opcode wraps the supplied buffer in
+    ``memoryview(buf).toreadonly()`` — the wrap is what lets
+    :func:`loads_owned` pin a transport lease under every decoded array
+    (numpy collapses chains of *ndarray* bases, but stops at a
+    memoryview), and what keeps received arrays read-only even when they
+    alias writable shared memory.
     """
 
     def reducer_override(self, obj):
         jax_array = _jax_array_type()
         if jax_array is not None and isinstance(obj, jax_array):
-            return np.asarray(obj).__reduce_ex__(5)
+            return _as_readonly(np.asarray(obj)).__reduce_ex__(5)
+        if type(obj) is np.ndarray and obj.flags.writeable:
+            # Plain ndarrays are the only types that emit out-of-band
+            # buffers in this codebase (subclasses reduce in-band).
+            return _as_readonly(obj).__reduce_ex__(5)
         return super().reducer_override(obj)
 
 
@@ -212,11 +237,8 @@ def decode_frames(frames: Sequence) -> Any:
                                             for f in frames[1:]])
 
 
-def loads(data: bytes) -> Any:
-    """Deserialize a framed message; falls back to bare-pickle (legacy)."""
-    if not is_framed(data):
-        return pickle.loads(data)
-    mv = memoryview(data)
+def _parse_frame_spans(mv) -> list[tuple[int, int]]:
+    """Parse a framed message's header: per-frame ``(offset, length)``."""
     (nframes,) = _NFRAMES.unpack_from(mv, 2)
     offset = 2 + _NFRAMES.size
     lengths = []
@@ -224,12 +246,117 @@ def loads(data: bytes) -> Any:
         (n,) = _FRAMELEN.unpack_from(mv, offset)
         lengths.append(n)
         offset += _FRAMELEN.size
-    frames = []
+    spans = []
     for n in lengths:
-        frames.append(mv[offset:offset + n])
+        spans.append((offset, n))
         offset += n
+    return spans
+
+
+def loads(data: bytes) -> Any:
+    """Deserialize a framed message; falls back to bare-pickle (legacy)."""
+    if not is_framed(data):
+        return pickle.loads(data)
+    mv = memoryview(data)
+    frames = [mv[off:off + n] for off, n in _parse_frame_spans(mv)]
     # Buffers alias the received message: zero-copy, read-only arrays.
     return pickle.loads(frames[0], buffers=frames[1:])
+
+
+# ---- decode with owner (transport-leased memory) ----------------------------
+#
+# ``loads`` over a transport-owned buffer (an shm slot) would hand out
+# arrays whose lifetime the transport cannot see — it would never know
+# when the slot may be reused. ``loads_owned`` threads an *owner* object
+# (an ``shm.SlotLease``) under every decoded array: each out-of-band
+# buffer handed to the unpickler is an ``_OwnedBuffer`` carrying the
+# owner, the encoder's READONLY_BUFFER opcode wraps it in a memoryview
+# (``.obj`` pins the _OwnedBuffer — numpy's view-base collapsing walks
+# ndarray bases but stops at a memoryview), and so the owner's refcount
+# hits zero exactly when the last decoded array dies. CPython refcounting
+# makes the release prompt; the owner's ``__del__``/``release()`` then
+# frees the slot.
+
+class _OwnedBuffer(np.ndarray):
+    """A uint8 view over transport-owned memory that keeps its owner (a
+    slot lease) alive for as long as any decoded array aliases it."""
+
+    _owner: Any = None
+
+
+def loads_owned(view, owner: Any) -> Any:
+    """Decode a framed message in place over transport-owned memory.
+
+    ``view`` must be a *writable* buffer over the framed message (writable
+    so the READONLY_BUFFER wrap actually happens — see ``_OwnedBuffer``);
+    decoded arrays alias it, are read-only, and keep ``owner`` alive until
+    the last of them is garbage-collected.
+    """
+    mv = memoryview(view).cast("B")
+    if mv.readonly:
+        raise ValueError(
+            "loads_owned requires a writable view (a readonly buffer is "
+            "passed through by the unpickler unwrapped, losing the owner)")
+    if not (mv.nbytes >= 2 and mv[:2] == MAGIC):
+        # Not a framed message (never produced by our slot writers):
+        # decode a private copy, nothing can alias the slot.
+        return pickle.loads(bytes(mv))
+    spans = _parse_frame_spans(mv)
+    (off0, n0), buf_spans = spans[0], spans[1:]
+    buffers = []
+    for offset, n in buf_spans:
+        frame = np.frombuffer(mv, np.uint8, count=n,
+                              offset=offset).view(_OwnedBuffer)
+        frame.flags.writeable = True
+        frame._owner = owner
+        buffers.append(frame)
+    return pickle.loads(mv[off0:off0 + n0], buffers=buffers)
+
+
+def owner_of(arr: Any) -> Any:
+    """The transport owner (slot lease) ``arr`` pins, or None.
+
+    Walks the base chain: decoded array -> numpy view(s) -> the readonly
+    memoryview the unpickler made -> the ``_OwnedBuffer`` carrying the
+    owner."""
+    node = arr
+    while node is not None:
+        if isinstance(node, _OwnedBuffer):
+            return node._owner
+        if isinstance(node, np.ndarray):
+            node = node.base
+        elif isinstance(node, memoryview):
+            node = node.obj
+        else:
+            return None
+    return None
+
+
+def materialize(obj: Any) -> Any:
+    """Deep-copy every transport-owned array view inside ``obj``.
+
+    A decoded message's arrays may alias a shared-memory slot; holding
+    them long-term pins the slot (starving the sender's slot pool).
+    ``materialize`` returns an equivalent structure whose arrays own their
+    memory, releasing the underlying lease(s) once the original is
+    dropped. Containers (list/tuple/dict, incl. NamedTuples) are rebuilt
+    only along paths that contain owned arrays."""
+    if isinstance(obj, np.ndarray):
+        return obj.copy() if owner_of(obj) is not None else obj
+    if isinstance(obj, (list, tuple)):
+        conv = [materialize(v) for v in obj]
+        if all(a is b for a, b in zip(conv, obj)):
+            return obj
+        if isinstance(obj, tuple):
+            return type(obj)(*conv) if hasattr(obj, "_fields") \
+                else tuple(conv)
+        return conv
+    if isinstance(obj, dict):
+        conv = {k: materialize(v) for k, v in obj.items()}
+        if all(conv[k] is obj[k] for k in obj):
+            return obj
+        return conv
+    return obj
 
 
 # ---- legacy (pre-frames) encode ---------------------------------------------

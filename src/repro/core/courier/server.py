@@ -56,6 +56,13 @@ class CourierServer:
     port — same dispatch, same exposure rules, same per-call batch
     isolation; the process launcher emits dual endpoints so same-host
     peers take the ring and everyone else falls back to gRPC.
+
+    Request dispatch is zero-copy on both transports: decoded argument
+    arrays are read-only views aliasing the inbound message (gRPC request
+    bytes, or a shared-memory pool slot pinned by a lease). The lease is
+    released after the handler returns — via refcount, so a handler that
+    *retains* an argument array keeps the slot pinned and must
+    ``np.copy`` it instead (see courier/README.md).
     """
 
     def __init__(self, obj: Any, port: int = 0, host: str = "127.0.0.1",

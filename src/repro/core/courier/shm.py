@@ -11,19 +11,27 @@ same-host processes over ``multiprocessing.shared_memory`` instead:
   data path. Records are length-prefixed and contiguous; a record that
   would straddle the wrap point is preceded by a pad record both sides
   skip deterministically.
-* **Bulk spill slots** — a message larger than ``SPILL_THRESHOLD`` is
-  scatter-gathered (``serialization.write_framed_into``) into a
-  per-direction *bulk slot* side segment and only a tiny reference
-  record enters the control ring, so the ring stays small while 8 MiB
-  tensors move at memcpy speed. The slot is created lazily, reused for
-  the connection's lifetime (segment creation and first-touch page
-  faults cost milliseconds on the kernels we deploy on), grown
-  geometrically when a bigger message arrives, and always written at a
-  *fixed* offset — cycling a multi-MiB ring through the cache measures
-  ~3x slower than rewriting one hot region. One large message per
-  direction is in flight at a time (seq_written/seq_consumed handshake);
-  the writer only waits until the reader has *copied* the message out,
-  so compute still overlaps transfer.
+* **Slot pool** — a message larger than ``SPILL_THRESHOLD`` is
+  scatter-gathered (``serialization.write_framed_into``) into one slot
+  of a per-direction *slot pool* side segment (``SLOT_COUNT`` fixed-
+  offset slots, free map in the segment header) and only a tiny
+  reference record enters the control ring, so the ring stays small
+  while 8 MiB tensors move at memcpy speed. The pool is created lazily,
+  reused for the connection's lifetime (segment creation and first-touch
+  page faults cost milliseconds on the kernels we deploy on), and
+  regrown under a versioned name when a bigger message arrives; slots
+  sit at *fixed* offsets — cycling a multi-MiB ring through the cache
+  measures ~3x slower than rewriting a few hot regions.
+* **Zero-copy receive** — the reader decodes a slot *in place*
+  (``serialization.loads_owned``): decoded arrays are read-only views
+  aliasing the slot, pinned by a :class:`SlotLease`. The slot returns to
+  the pool when the decoded message is garbage-collected (or the lease
+  explicitly released) — **not** when the receive returns — so the
+  receive path never copies the payload, and with ``SLOT_COUNT`` slots
+  per direction, pipelined large messages overlap instead of
+  serializing on one slot. A consumer that retains a decoded tensor
+  long-term must ``np.copy`` it (or ``serialization.materialize`` the
+  message) or it starves the sender's pool.
 * **Doorbell** — waiting sides use an adaptive spin-then-micro-sleep loop
   (a portable stand-in for a futex: hot peers rendezvous in microseconds,
   idle peers cost ~0 CPU). Position loads/stores are 8-byte aligned, so
@@ -40,9 +48,9 @@ Record layout (little-endian)::
     size:u32 | kind:u32 | req_id:u64 | body[size - 16]
 
 ``size == 0`` marks a pad record (skip to the wrap point). The body is a
-standard framed serialization message, or a spill reference::
+standard framed serialization message, or a slot-pool reference::
 
-    \xc5\x02 | name_len:u16 | segment_name | total:u64
+    \xc5\x03 | name_len:u16 | segment_name | slot:u32 | total:u64
 """
 
 from __future__ import annotations
@@ -66,11 +74,20 @@ from repro.core.courier import serialization as ser
 # ---- tunables (module-level so tests/benchmarks can shrink them) ------------
 
 RING_CAPACITY = 1 << 20        # per-direction control-ring data bytes
-SPILL_THRESHOLD = 96 * 1024    # messages above this go to the bulk slot
-SLOT_HEADROOM = 1.5            # bulk slots are grown to msg_size * this
+SPILL_THRESHOLD = 96 * 1024    # messages above this go to the slot pool
+SLOT_COUNT = 4                 # fixed-offset slots per pool (per direction)
+SLOT_HEADROOM = 1.5            # pool slots are sized to msg_size * this
 CONNECT_WAIT_S = 5.0           # how long a client waits for the listener
 ACCEPT_WAIT_S = 5.0            # how long a client waits for HELLO
 _POLL_ACCEPT_S = 0.01          # listener connect-dir poll interval
+
+_POOL_GROW_GRACE_S = 0.02      # full-pool wait before expanding the pool
+
+# _doorbell_wait backoff schedule (module-level so tests can shrink it).
+_SPIN_HOT = 1600               # hot-phase checks (sched_yield every 4th)
+_SPIN_MICRO = 6400             # then micro-sleeps until this many checks
+_SLEEP_MICRO_S = 0.00002
+_SLEEP_IDLE_S = 0.0002
 
 # ---- record kinds ------------------------------------------------------------
 
@@ -82,18 +99,29 @@ KIND_BATCH_REPLY = 4
 KIND_CLOSE = 5
 
 _REC = struct.Struct("<IIQ")       # size (incl. header), kind, req_id
-_SPILL_MAGIC = b"\xc5\x02"         # bulk-slot reference: namelen|name|total
-_SPILL_HEAD = struct.Struct("<H")  # segment-name length
-_SPILL_LEN = struct.Struct("<Q")   # framed-message length in the segment
+_REF_MAGIC = b"\xc5\x03"           # pool reference: namelen|name|slot|total
+_REF_NAME = struct.Struct("<H")    # segment-name length
+_REF_TAIL = struct.Struct("<IQ")   # slot index, framed-message length
 
-# Segment header: wpos and rpos on separate cache lines; one closed byte
-# per side so neither performs a read-modify-write on shared state.
+# Ring segment header: wpos and rpos on separate cache lines; one closed
+# byte per side so neither performs a read-modify-write on shared state.
 _WPOS_OFF = 0
 _RPOS_OFF = 64
 _WCLOSED_OFF = 128
 _RCLOSED_OFF = 129
 _DATA_OFF = 192
 _POS = struct.Struct("<Q")
+
+# Slot-pool segment header (see SlotPool): slot count, slot size, a
+# reader-closed byte, then one state byte per slot (0 free / 1 leased).
+# Slot data starts page-aligned so slots never share a page with header
+# state the two sides poll.
+_PH_NSLOTS = struct.Struct("<I")   # at offset 0
+_PH_SLOTSZ_OFF = 8                 # u64 via _POS
+_PH_RCLOSED_OFF = 16
+_PH_STATES_OFF = 64
+_POOL_DATA_OFF = 4096
+_SLOT_ALIGN = 4096
 
 
 class RingClosed(ConnectionError):
@@ -152,16 +180,20 @@ def _pid_alive(pid: int) -> bool:
 def _doorbell_wait(ready: Callable[[], bool], *,
                    deadline: Optional[float],
                    give_up: Callable[[], Optional[BaseException]]) -> bool:
-    """Adaptive wait: yield-spin, then micro-sleeps capped at 500us.
+    """Adaptive wait: poll with periodic yields, then micro-sleeps.
 
-    The hot phase uses ``time.sleep(0)`` (sched_yield), **never** a raw
-    spin: a raw Python loop holds the GIL for a full switch interval
-    (~5ms), convoying the very thread that would satisfy the wait when
-    sender and waiter share a process. Yield-spinning keeps hot-path
-    rendezvous in the tens of microseconds while costing idle waiters
-    ~0 CPU once the sleep phase kicks in. Returns False on deadline;
-    raises whatever ``give_up`` supplies (peer-closed / peer-dead
-    detection, throttled — it may involve a pid-probe syscall)."""
+    The hot phase checks ``ready`` back-to-back and releases the GIL with
+    ``time.sleep(0)`` (sched_yield) every 4th check. Yielding on *every*
+    check paid a syscall per sub-microsecond poll and put the shm ping at
+    ~240us; polling between yields brings hot rendezvous down to the
+    check granularity itself while still never holding the GIL longer
+    than a few checks (a pure Python spin would hold it for a full switch
+    interval, ~5ms, convoying the very thread that would satisfy the wait
+    when sender and waiter share a process). After the hot phase come
+    20us micro-sleeps, then 200us naps so long-idle waiters cost ~0 CPU.
+    Returns False on deadline; raises whatever ``give_up`` supplies
+    (peer-closed / peer-dead detection, throttled — it may involve a
+    pid-probe syscall)."""
     spins = 0
     while not ready():
         if spins % 128 == 0:
@@ -171,12 +203,13 @@ def _doorbell_wait(ready: Callable[[], bool], *,
             if deadline is not None and time.monotonic() >= deadline:
                 return False
         spins += 1
-        if spins < 300:
-            time.sleep(0)
-        elif spins < 1500:
-            time.sleep(0.00005)
+        if spins < _SPIN_HOT:
+            if spins % 4 == 0:
+                time.sleep(0)
+        elif spins < _SPIN_MICRO:
+            time.sleep(_SLEEP_MICRO_S)
         else:
-            time.sleep(0.0005)
+            time.sleep(_SLEEP_IDLE_S)
     return True
 
 
@@ -343,133 +376,269 @@ class Ring:
             _unlink_quiet(name)
 
 
-class Slot:
-    """One-message side segment for bulk payloads, written at a fixed
-    offset (hot cache region, unlike cycling through a big ring).
+class SlotLease:
+    """Pins one :class:`SlotPool` slot under a decoded message.
 
-    ``seq_written`` (writer-owned, at :data:`_WPOS_OFF`) and
-    ``seq_consumed`` (reader-owned, at :data:`_RPOS_OFF`) implement a
-    single-entry handshake: the writer waits until the previous message
-    was copied out, fills the data region, publishes ``seq_written``, and
-    only then emits the control-ring reference, so the reader never sees
-    a half-written slot.
+    ``serialization.loads_owned`` threads the lease beneath every decoded
+    array, so the slot returns to the pool exactly when the consumer
+    drops the decoded object graph (CPython refcounting makes that
+    prompt) — or earlier, via an explicit :meth:`release`. Idempotent;
+    ``__del__`` is the GC fallback.
     """
 
-    def __init__(self, shm: shared_memory.SharedMemory):
+    __slots__ = ("_pool", "_index", "_lock", "__weakref__")
+
+    def __init__(self, pool: "SlotPool", index: int):
+        self._pool = pool
+        self._index = index
+        # Leases release from arbitrary threads (GC of the decoded graph,
+        # explicit release); the swap below must not double-free the slot.
+        self._lock = threading.Lock()
+
+    @property
+    def released(self) -> bool:
+        return self._pool is None
+
+    def release(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool._release_slot(self._index)  # noqa: SLF001 - by design
+
+    def __del__(self):
+        try:
+            self.release()
+        except Exception:  # interpreter shutdown: globals may be gone
+            pass
+
+
+class SlotPool:
+    """N fixed-offset one-message slots over one shm segment, with a
+    header-tracked free map and a lease-based free protocol.
+
+    Each state byte has exactly one writer per transition: the segment
+    *writer* claims a free slot (0 -> 1, under the channel send lock),
+    gathers the message into it, and publishes the control-ring
+    reference only afterwards, so the reader never sees a half-written
+    slot. The *reader* decodes the slot in place and returns it
+    (1 -> 0) when the decoded message's :class:`SlotLease` is released —
+    by GC of the object graph, not by the receive call — which is what
+    makes the receive path zero-copy and lets ``SLOT_COUNT`` large
+    messages be in flight per direction at once.
+
+    The segment name is unlinked eagerly on :meth:`release`; the mapping
+    itself is dropped only when the last outstanding lease dies, so a
+    decoded view retained past transport close stays valid (POSIX keeps
+    unlinked memory alive until the final ``munmap``).
+    """
+
+    def __init__(self, shm: shared_memory.SharedMemory, owner: bool):
         self._shm = shm
         self._buf = shm.buf
-        self.capacity = shm.size - _DATA_OFF
+        self._name = shm.name
+        self._owner = owner
+        self.nslots = _PH_NSLOTS.unpack_from(shm.buf, 0)[0]
+        self.slot_size = _POS.unpack_from(shm.buf, _PH_SLOTSZ_OFF)[0]
+        self._lock = threading.Lock()  # guards lease count + close
+        self._outstanding = 0
         self._released = False
+        self._close_deferred = False
 
     @classmethod
-    def create(cls, name: str, capacity: int) -> "Slot":
-        shm = shared_memory.SharedMemory(name=name, create=True,
-                                         size=capacity + _DATA_OFF)
+    def create(cls, name: str, slot_size: int,
+               nslots: Optional[int] = None) -> "SlotPool":
+        nslots = SLOT_COUNT if nslots is None else nslots
+        slot_size = -(-slot_size // _SLOT_ALIGN) * _SLOT_ALIGN
+        shm = shared_memory.SharedMemory(
+            name=name, create=True,
+            size=_POOL_DATA_OFF + nslots * slot_size)
         _untrack(shm)
-        return cls(shm)
+        _PH_NSLOTS.pack_into(shm.buf, 0, nslots)
+        _POS.pack_into(shm.buf, _PH_SLOTSZ_OFF, slot_size)
+        return cls(shm, owner=True)
 
     @classmethod
-    def attach(cls, name: str) -> "Slot":
+    def attach(cls, name: str) -> "SlotPool":
         shm = shared_memory.SharedMemory(name=name)
         _untrack(shm)
-        return cls(shm)
+        return cls(shm, owner=False)
 
     @property
     def name(self) -> str:
-        return self._shm.name
+        return self._name
 
-    def _load(self, off: int) -> int:
-        return _POS.unpack_from(self._buf, off)[0]
+    def _data_off(self, index: int) -> int:
+        return _POOL_DATA_OFF + index * self.slot_size
 
     @property
-    def free(self) -> bool:
-        return self._load(_WPOS_OFF) == self._load(_RPOS_OFF)
+    def all_free(self) -> bool:
+        buf = self._buf
+        return buf is not None and all(
+            buf[_PH_STATES_OFF + i] == 0 for i in range(self.nslots))
 
-    def write_frames(self, frames, timeout: Optional[float] = None,
-                     give_up: Optional[Callable] = None) -> None:
-        """Wait for the slot to be free, then gather ``frames`` into it."""
+    # -- writer side ---------------------------------------------------------
+    def acquire(self, timeout: Optional[float] = None,
+                give_up: Optional[Callable] = None) -> int:
+        """Claim a free slot (0 -> 1); blocks while all are leased by the
+        consumer. Caller must serialize acquires (the channel send lock)."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        buf = self._buf
+
+        def _any_free():
+            return any(buf[_PH_STATES_OFF + i] == 0
+                       for i in range(self.nslots))
 
         def _give_up():
-            if self._buf[_RCLOSED_OFF] != 0:
-                return RingClosed("slot reader closed")
+            if buf[_PH_RCLOSED_OFF] != 0:
+                return RingClosed("slot pool reader closed")
             return give_up() if give_up is not None else None
 
-        if not _doorbell_wait(lambda: self.free, deadline=deadline,
-                              give_up=_give_up):
-            raise TimeoutError("bulk slot still in use")
-        ser.write_framed_into(memoryview(self._buf)[_DATA_OFF:], frames)
-        _POS.pack_into(self._buf, _WPOS_OFF, self._load(_WPOS_OFF) + 1)
+        while True:
+            for i in range(self.nslots):
+                if buf[_PH_STATES_OFF + i] == 0:
+                    buf[_PH_STATES_OFF + i] = 1
+                    return i
+            if not _doorbell_wait(_any_free, deadline=deadline,
+                                  give_up=_give_up):
+                raise TimeoutError(
+                    "slot pool exhausted (all slots leased by the "
+                    "consumer — long-retained decoded messages must be "
+                    "copied, see courier/README.md)")
 
-    def unpublish(self) -> None:
-        """Roll back the last ``write_frames`` (writer-side only, and only
-        before its control-ring reference was emitted — the reader cannot
-        have touched it). Keeps a failed send from poisoning the slot."""
-        _POS.pack_into(self._buf, _WPOS_OFF, self._load(_WPOS_OFF) - 1)
+    def write_frames_at(self, index: int, frames) -> None:
+        off = self._data_off(index)
+        ser.write_framed_into(
+            memoryview(self._buf)[off:off + self.slot_size], frames)
 
-    def consume(self, total: int) -> Any:
-        """Copy the current message out, free the slot, decode."""
-        data = ser.read_copy(self._buf, _DATA_OFF, total)
-        _POS.pack_into(self._buf, _RPOS_OFF, self._load(_WPOS_OFF))
-        return ser.loads(data)
+    def abandon(self, index: int) -> None:
+        """Roll back an acquire whose control-ring reference was never
+        emitted (the reader cannot have seen the slot)."""
+        self._buf[_PH_STATES_OFF + index] = 0
+
+    # -- reader side ---------------------------------------------------------
+    def view(self, index: int, total: int) -> memoryview:
+        """Writable view of one message in place (writable so the decode
+        can pin the lease — see ``serialization.loads_owned``)."""
+        off = self._data_off(index)
+        return memoryview(self._buf)[off:off + total]
+
+    def lease(self, index: int) -> SlotLease:
+        with self._lock:
+            self._outstanding += 1
+        return SlotLease(self, index)
+
+    def consume_copy(self, index: int, total: int):
+        """PR-2 style copy-out receive: copy the message into fresh
+        memory and free the slot immediately (the A/B baseline arm)."""
+        data = ser.read_copy(self._buf, self._data_off(index), total)
+        self._buf[_PH_STATES_OFF + index] = 0
+        return data
 
     def close_read(self) -> None:
-        self._buf[_RCLOSED_OFF] = 1
+        with contextlib.suppress(Exception):
+            self._buf[_PH_RCLOSED_OFF] = 1
+
+    def _release_slot(self, index: int) -> None:
+        with self._lock:
+            if self._buf is not None:
+                with contextlib.suppress(Exception):
+                    self._buf[_PH_STATES_OFF + index] = 0
+            self._outstanding -= 1
+            if self._close_deferred and self._outstanding <= 0:
+                self._close_now()
+
+    def _close_now(self) -> None:
+        self._close_deferred = False
+        self._buf = None
+        shm = self._shm
+        try:
+            shm.close()
+        except BufferError:
+            # Decoded views are still exported (dealloc ordering runs the
+            # lease's __del__ before the view dies, or the caller kept a
+            # raw buffer): the mmap must outlive them, and dies with the
+            # last view. Disarm the handle — close() bailed before the
+            # fd, and SharedMemory.__del__ would re-raise noisily at GC.
+            shm._mmap = None  # noqa: SLF001
+            if shm._fd >= 0:  # noqa: SLF001
+                with contextlib.suppress(OSError):
+                    os.close(shm._fd)  # noqa: SLF001
+                shm._fd = -1  # noqa: SLF001
+        except Exception:  # pragma: no cover - best-effort teardown
+            pass
 
     def release(self, unlink: bool = False) -> None:
-        if self._released:
-            return
-        self._released = True
-        self._buf = None
-        name = self._shm.name
-        with contextlib.suppress(Exception):
-            self._shm.close()
-        if unlink:
-            _unlink_quiet(name)
+        """Unlink the name now (if asked); drop the mapping when the last
+        outstanding lease is released. Idempotent."""
+        with self._lock:
+            if self._released:
+                return
+            self._released = True
+            if unlink:
+                _unlink_quiet(self._name)
+            if self._outstanding > 0:
+                self._close_deferred = True
+            else:
+                self._close_now()
 
 
-# ---- one direction: control ring + lazy bulk slot ---------------------------
+# ---- one direction: control ring + lazy slot pool ----------------------------
 
 class Chan:
     """One direction of a connection.
 
     Small messages gather straight into the control ring. Larger ones go
-    through the direction's *bulk slot* (see :class:`Slot`) — created
+    through the direction's *slot pool* (see :class:`SlotPool`) — created
     lazily by the writer, reused for the connection's lifetime, regrown
     under a fresh versioned name when a bigger message arrives. A tiny
-    ``_SPILL_MAGIC`` reference (segment name + length) enters the control
-    ring; the reader attaches the named slot (cached) and copies the
-    message out. The per-direction send lock keeps slot fills and control
-    records in lockstep order.
+    ``_REF_MAGIC`` reference (segment name + slot index + length) enters
+    the control ring; the reader attaches the named pool (cached) and
+    decodes the slot **in place** — the slot frees when the decoded
+    message's lease dies, so pipelined large messages use distinct slots
+    concurrently. ``zero_copy=False`` selects the copy-out receive
+    instead (one full copy per message, slot freed immediately): the A/B
+    baseline arm in benchmarks/rpc_overhead.py. The per-direction send
+    lock keeps slot fills and control records in lockstep order.
     """
 
-    def __init__(self, ctrl: Ring, bulk_name: str, writer: bool):
+    def __init__(self, ctrl: Ring, bulk_name: str, writer: bool,
+                 zero_copy: bool = True):
         self._ctrl = ctrl
         self._bulk_name = bulk_name
         self._writer = writer
-        self._slot: Optional[Slot] = None
-        self._slot_version = 0
-        self._slots_attached: dict[str, Slot] = {}
+        self._zero_copy = zero_copy
+        self._pool: Optional[SlotPool] = None
+        self._pool_version = 0
+        self._retired: list[SlotPool] = []
+        self._pools_attached: dict[str, SlotPool] = {}
         self._lock = threading.Lock()
 
     # -- writer side ---------------------------------------------------------
-    def _writer_slot(self, total: int, timeout, give_up) -> Slot:
-        if self._slot is None or self._slot.capacity < total:
-            if self._slot is not None:
-                # All refs to the old slot were consumed (it is free by
-                # the time we grow), so dropping the name is safe; the
-                # reader's cached attachment stays valid until released.
-                wait_s = 30.0 if timeout is None else timeout
-                if not _doorbell_wait(lambda: self._slot.free,
-                                      deadline=time.monotonic() + wait_s,
-                                      give_up=give_up or (lambda: None)):
-                    raise TimeoutError("bulk slot still in use")
-                self._slot.release(unlink=True)
-            self._slot_version += 1
-            self._slot = Slot.create(
-                f"{self._bulk_name}v{self._slot_version}",
-                int(total * SLOT_HEADROOM))
-        return self._slot
+    def _new_pool(self, slot_size: int) -> SlotPool:
+        if self._pool is not None:
+            # The replaced pool may still hold in-flight messages (refs
+            # in the ring, leases on the consumer); park it and unlink
+            # once every slot has been released.
+            self._retired.append(self._pool)
+        self._pool_version += 1
+        self._pool = SlotPool.create(
+            f"{self._bulk_name}v{self._pool_version}", slot_size=slot_size)
+        return self._pool
+
+    def _writer_pool(self, total: int) -> SlotPool:
+        if self._pool is None or self._pool.slot_size < total:
+            self._new_pool(int(total * SLOT_HEADROOM))
+        self._reap_retired()
+        return self._pool
+
+    def _reap_retired(self) -> None:
+        keep = []
+        for pool in self._retired:
+            if pool.all_free:
+                pool.release(unlink=True)
+            else:
+                keep.append(pool)
+        self._retired = keep
 
     def send(self, kind: int, req_id: int, obj: Any,
              timeout: Optional[float] = None, give_up=None) -> None:
@@ -480,19 +649,31 @@ class Chan:
                 self._ctrl.write(kind, req_id, ser.framed_chunks(frames),
                                  timeout=timeout, give_up=give_up)
                 return
-            slot = self._writer_slot(total, timeout, give_up)
-            slot.write_frames(frames, timeout=timeout, give_up=give_up)
-            name_b = slot.name.encode()
-            ref = (_SPILL_MAGIC + _SPILL_HEAD.pack(len(name_b)) + name_b
-                   + _SPILL_LEN.pack(total))
+            pool = self._writer_pool(total)
             try:
+                grace = _POOL_GROW_GRACE_S if timeout is None \
+                    else min(timeout, _POOL_GROW_GRACE_S)
+                index = pool.acquire(timeout=grace, give_up=give_up)
+            except TimeoutError:
+                # The consumer leases every slot (e.g. more pipelined
+                # results alive than SLOT_COUNT). Expand with a fresh
+                # pool instead of deadlocking: the stalled pool drains as
+                # results are dropped and is then reaped, so memory
+                # tracks actual concurrent retention. The grace keeps
+                # soft backpressure against runaway producers.
+                pool = self._new_pool(pool.slot_size)
+                index = pool.acquire(timeout=timeout, give_up=give_up)
+            try:
+                pool.write_frames_at(index, frames)
+                name_b = pool.name.encode()
+                ref = (_REF_MAGIC + _REF_NAME.pack(len(name_b)) + name_b
+                       + _REF_TAIL.pack(index, total))
                 self._ctrl.write(kind, req_id, [ref], timeout=timeout,
                                  give_up=give_up)
             except BaseException:
-                # The reference never entered the ring: roll the slot
-                # publish back so the next send doesn't wait forever on a
-                # message nobody will ever consume.
-                slot.unpublish()
+                # The reference never entered the ring: return the slot
+                # so later sends don't wait on a message nobody consumes.
+                pool.abandon(index)
                 raise
 
     # -- reader side ---------------------------------------------------------
@@ -507,25 +688,43 @@ class Chan:
             return None
         kind, req_id, body = rec
         try:
-            obj = self._decode(req_id, body, give_up)
-        except RingClosed:
-            raise
+            obj = self._decode(body)
+        except (RingClosed, KeyboardInterrupt, SystemExit):
+            raise  # interrupts reach the driving caller, not a reply
         except BaseException as exc:  # noqa: BLE001
             obj = DecodeFailure(exc)
         return kind, req_id, obj
 
-    def _decode(self, req_id: int, body: bytes, give_up) -> Any:
-        if bytes(body[:2]) == _SPILL_MAGIC:
-            (name_len,) = _SPILL_HEAD.unpack_from(body, 2)
-            name = bytes(body[4:4 + name_len]).decode()
-            (total,) = _SPILL_LEN.unpack_from(body, 4 + name_len)
-            slot = self._slots_attached.get(name)
-            if slot is None:
-                slot = Slot.attach(name)
-                self._slots_attached[name] = slot
+    def _decode(self, body) -> Any:
+        # ``body`` is bytes or a memoryview; compare/parse through
+        # memoryview slices — no intermediate ``bytes`` materialization.
+        mv = memoryview(body)
+        if mv.nbytes >= 2 and mv[:2] == _REF_MAGIC:
+            (name_len,) = _REF_NAME.unpack_from(mv, 2)
+            name = str(mv[4:4 + name_len], "ascii")
+            index, total = _REF_TAIL.unpack_from(mv, 4 + name_len)
+            pool = self._pools_attached.get(name)
+            if pool is None:
+                pool = SlotPool.attach(name)
+                # A new pool name means the writer regrew or expanded:
+                # evict drained older attachments so superseded multi-MiB
+                # mappings don't pin memory for the connection's
+                # lifetime. all_free is a safe eviction test — any
+                # in-flight message (published or not) holds its slot's
+                # state byte at 1 until the consumer releases the lease;
+                # an evicted-but-still-current pool just re-attaches by
+                # name on its next reference.
+                for old_name, old in list(self._pools_attached.items()):
+                    if old.all_free:
+                        old.release()
+                        del self._pools_attached[old_name]
+                self._pools_attached[name] = pool
             # The slot was filled and published before its control-ring
             # reference, so the message is already there.
-            return slot.consume(total)
+            if not self._zero_copy:
+                return ser.loads(pool.consume_copy(index, total))
+            return ser.loads_owned(pool.view(index, total),
+                                   pool.lease(index))
         return ser.loads(body)
 
     # -- lifecycle -----------------------------------------------------------
@@ -536,9 +735,9 @@ class Chan:
     def close_read(self) -> None:
         with contextlib.suppress(Exception):
             self._ctrl.close_read()
-        for slot in self._slots_attached.values():
-            with contextlib.suppress(Exception):
-                slot.close_read()  # unblock a writer waiting on the slot
+        # Snapshot: the reply-driver thread may attach/evict concurrently.
+        for pool in list(self._pools_attached.values()):
+            pool.close_read()  # unblock a writer waiting on a leased slot
 
     @property
     def ctrl(self) -> Ring:
@@ -546,12 +745,15 @@ class Chan:
 
     def release(self, unlink: bool = False) -> None:
         self._ctrl.release(unlink=unlink)
-        if self._slot is not None:
-            self._slot.release(unlink=True)  # writer owns the slot name
-            self._slot = None
-        for slot in self._slots_attached.values():
-            slot.release()
-        self._slots_attached.clear()
+        if self._pool is not None:
+            self._pool.release(unlink=True)  # writer owns the pool name
+            self._pool = None
+        for pool in self._retired:
+            pool.release(unlink=True)
+        self._retired = []
+        for pool in list(self._pools_attached.values()):
+            pool.release()  # mapping lives on under outstanding leases
+        self._pools_attached.clear()
 
 
 def _sweep_segments(prefix: str) -> None:
@@ -609,10 +811,12 @@ class _ServerConn:
     and a reply channel shared by the handler pool."""
 
     def __init__(self, listener: "ShmListener", conn_id: str,
-                 req: Ring, rep: Ring, client_pid: int):
+                 req: Ring, rep: Ring, client_pid: int,
+                 zero_copy: bool = True):
         self._listener = listener
         self._conn_id = conn_id
-        self._in = Chan(req, bulk_name=f"{conn_id}qb", writer=False)
+        self._in = Chan(req, bulk_name=f"{conn_id}qb", writer=False,
+                        zero_copy=zero_copy)
         self._out = Chan(rep, bulk_name=f"{conn_id}rb", writer=True)
         self._client_pid = client_pid
         self._thread = threading.Thread(
@@ -689,17 +893,20 @@ class _ServerConn:
                         return  # client died without a CLOSE
                     continue
                 kind, req_id, obj = rec
+                rec = None
                 if kind == KIND_CLOSE:
                     return
                 if isinstance(obj, DecodeFailure):
                     self._reply(KIND_REPLY, req_id,
                                 ser.make_error_status(obj.exc))
+                    obj = None
                     continue
                 if kind == KIND_CALL:
                     runner = self._run_call
                 elif kind == KIND_BATCH:
                     runner = self._run_batch
                 else:
+                    obj = None
                     continue
                 # A lone request runs inline: on small hosts a pool
                 # hand-off costs a wake AND leaves this thread spinning
@@ -716,6 +923,11 @@ class _ServerConn:
                         return  # listener stopped the pool mid-accept
                 else:
                     runner(req_id, obj)
+                # Drop this thread's reference before blocking in recv
+                # again: a zero-copy request pins its pool slot through
+                # the decoded object's lease, which frees when the last
+                # reference (here, or the handler's locals) dies.
+                obj = None
         finally:
             self._out.close_write()
             self._in.close_read()
@@ -792,7 +1004,8 @@ class ShmListener:
             conn = _ServerConn(self, req["conn"],
                                req=Ring.attach(req["req"]),
                                rep=Ring.attach(req["rep"]),
-                               client_pid=int(req["pid"]))
+                               client_pid=int(req["pid"]),
+                               zero_copy=bool(req.get("zc", True)))
         except Exception:  # malformed/raced connect file: drop it
             with contextlib.suppress(OSError):
                 os.unlink(path)
@@ -842,17 +1055,21 @@ class ClientConnection:
     the rendezvous handshake, then sends records / receives replies."""
 
     def __init__(self, name: str, req: Ring, rep: Ring, conn_id: str,
-                 server_pid: int):
+                 server_pid: int, zero_copy: bool = True):
         self.name = name
         self._out = Chan(req, bulk_name=f"{conn_id}qb", writer=True)
-        self._in = Chan(rep, bulk_name=f"{conn_id}rb", writer=False)
+        self._in = Chan(rep, bulk_name=f"{conn_id}rb", writer=False,
+                        zero_copy=zero_copy)
         self._conn_id = conn_id
         self._server_pid = server_pid
         self._closed = False
 
     @classmethod
-    def connect(cls, name: str, wait: Optional[float] = None
-                ) -> "ClientConnection":
+    def connect(cls, name: str, wait: Optional[float] = None,
+                zero_copy: bool = True) -> "ClientConnection":
+        """``zero_copy=False`` selects the copy-out receive on *both*
+        sides of this connection (the server mirrors the flag for its
+        request channel) — the PR-2 baseline arm for paired A/B runs."""
         if not supported():
             raise ShmConnectError("shm transport requires POSIX")
         wait = CONNECT_WAIT_S if wait is None else wait
@@ -887,7 +1104,7 @@ class ClientConnection:
         rep = Ring.create(f"{conn_id}r")
         try:
             spec = {"conn": conn_id, "req": req.name, "rep": rep.name,
-                    "pid": os.getpid()}
+                    "pid": os.getpid(), "zc": bool(zero_copy)}
             tmp = os.path.join(d, f".{conn_id}.tmp")
             with open(tmp, "w") as f:
                 json.dump(spec, f)
@@ -909,7 +1126,8 @@ class ClientConnection:
             req.release(unlink=True)
             rep.release(unlink=True)
             raise
-        return cls(name, req, rep, conn_id, server_pid)
+        return cls(name, req, rep, conn_id, server_pid,
+                   zero_copy=zero_copy)
 
     # -- data path -----------------------------------------------------------
     def send(self, kind: int, req_id: int, obj: Any,

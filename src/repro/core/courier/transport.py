@@ -299,10 +299,19 @@ class ShmTransport(Transport):
     One SPSC ring per direction (shm.py): requests are scatter-gathered
     straight into the ring (``serialization.encode_frames`` +
     ``framed_chunks`` — no intermediate ``bytes``), large messages go
-    through the per-direction bulk slot, and replies resolve through a
+    through the per-direction slot pool, and replies resolve through a
     req-id -> Future correlation map so ``call_future``/``batch_call``
     pipeline: N in-flight calls share the rings without blocking each
     other.
+
+    Large replies are decoded **zero-copy**: result arrays are read-only
+    views aliasing a pool slot, pinned by a lease that frees the slot
+    when the decoded result is garbage-collected. Callers that retain a
+    result long-term should ``np.copy`` it (or
+    ``serialization.materialize`` the whole result) so the sender's pool
+    is not starved. ``zero_copy=False`` restores the copy-out receive on
+    both directions of the connection — the paired A/B baseline in
+    benchmarks/rpc_overhead.py.
 
     Receiving is *caller-driven*: the thread blocked in a synchronous
     ``call`` takes the drive lock and drains the reply ring itself
@@ -314,7 +323,8 @@ class ShmTransport(Transport):
     """
 
     def __init__(self, endpoint: str, timeout: Optional[float] = None,
-                 connect_wait: Optional[float] = None):
+                 connect_wait: Optional[float] = None,
+                 zero_copy: bool = True):
         if endpoint.startswith("shm://"):
             endpoint = endpoint[len("shm://"):]
         self.endpoint = f"shm://{endpoint}"
@@ -322,7 +332,7 @@ class ShmTransport(Transport):
         # Raises ShmConnectError if no healthy listener; make_transport
         # catches it to fall back to gRPC.
         self._conn = shm_mod.ClientConnection.connect(
-            endpoint, wait=connect_wait)
+            endpoint, wait=connect_wait, zero_copy=zero_copy)
         self._pending: dict[int, cf.Future] = {}
         self._plock = threading.Lock()
         self._drive_lock = threading.Lock()
@@ -401,8 +411,12 @@ class ShmTransport(Transport):
                     self._drive_lock.release()
 
     def _fail_pending(self, exc: BaseException) -> None:
-        self._broken = exc
+        # _broken is published under _plock, in the same critical section
+        # that empties the map: a _submit either sees _broken and raises,
+        # or registers its future before the clear and gets it failed —
+        # never an orphaned pending future nobody will resolve.
         with self._plock:
+            self._broken = exc
             pending = list(self._pending.values())
             self._pending.clear()
         for fut in pending:
@@ -412,13 +426,13 @@ class ShmTransport(Transport):
     def _submit(self, kind: int, payload) -> tuple[int, cf.Future]:
         if self._closed:
             raise RuntimeError(f"transport to {self.endpoint} is closed")
-        if self._broken is not None:
-            raise ser.RemoteError(
-                f"courier endpoint {self.endpoint} is broken: "
-                f"{self._broken}")
         fut: cf.Future = cf.Future()
         fut.set_running_or_notify_cancel()
         with self._plock:
+            if self._broken is not None:
+                raise ser.RemoteError(
+                    f"courier endpoint {self.endpoint} is broken: "
+                    f"{self._broken}")
             self._next_id += 1
             req_id = self._next_id
             self._pending[req_id] = fut
@@ -451,6 +465,8 @@ class ShmTransport(Transport):
         while not fut.done():
             if self._closed:
                 break
+            if deadline is not None and time.monotonic() >= deadline:
+                raise self._timed_out(req_id)
             if self._drive_lock.acquire(blocking=False):
                 try:
                     while not fut.done() and not self._closed \

@@ -27,7 +27,13 @@ from repro.serve import decode as serve_lib
 
 
 class ModelServer:
-    """Holds params; serves batched generate() on its mesh."""
+    """Holds params; serves batched generate() on its mesh.
+
+    ``prompts`` arrives over courier as a read-only array that may alias
+    shared transport memory (the shm slot pool) — ``jnp.asarray`` device-
+    puts straight from that view, so the Batcher -> ModelServer hop adds
+    no extra host copy, and the slot frees when this call returns.
+    """
 
     def __init__(self, model_cfg: ModelConfig, max_new: int = 8, mesh=None):
         import jax
@@ -52,6 +58,17 @@ class Batcher:
     thread goes straight back to coalescing the next group while the mesh
     is still computing the previous one (bounded by ``max_inflight``),
     instead of blocking on one RPC per batch.
+
+    Queued prompts are kept as the transport handed them over — over the
+    shm transport that is a zero-copy read-only view aliasing a shared-
+    memory slot — and are copied exactly once, into the padded batch
+    array. (The slot lease itself stays pinned by each blocked
+    ``submit()`` frame until its reply is delivered, so pool residency is
+    bounded by in-flight requests — fine for prompt-sized payloads; the
+    zero-copy win is on the large generate() replies.) Ragged groups are
+    right-padded with token 0; the model sees pad tokens as context
+    (generate() has no length mask), so callers wanting exact ragged
+    semantics should submit equal-length prompts per group.
     """
 
     def __init__(self, server, max_batch: int = 8, max_wait_s: float = 0.02,
@@ -68,6 +85,8 @@ class Batcher:
     def submit(self, prompt):
         """Blocking request: returns the completed sequence."""
         done = queue.Queue(maxsize=1)
+        # asarray, not array: an int32 prompt (incl. a transport-owned
+        # view) is queued as-is; the one copy happens in _loop's stack.
         self._q.put((np.asarray(prompt, np.int32), done))
         out = done.get(timeout=120)
         if isinstance(out, BaseException):
@@ -87,7 +106,15 @@ class Batcher:
                     group.append(self._q.get(timeout=remaining))
                 except queue.Empty:
                     break
-            prompts = np.stack([g[0] for g in group])
+            # One copy per prompt: transport views -> the padded batch
+            # (right-padded with 0 when lengths differ). Rebinding
+            # ``group`` to the reply queues drops this thread's prompt
+            # references before the batch RPC goes out.
+            width = max(len(g[0]) for g in group)
+            prompts = np.zeros((len(group), width), np.int32)
+            for row, (p, _) in zip(prompts, group):
+                row[:len(p)] = p
+            group = [done for _, done in group]
             self._inflight.acquire()
             fut = self._server.futures.generate(prompts)
             self.batches.append(len(group))
@@ -99,10 +126,10 @@ class Batcher:
         try:
             outs = fut.result()
         except BaseException as exc:  # noqa: BLE001 - fail the waiters
-            for _, done in group:
+            for done in group:
                 done.put(exc)
             return
-        for (_, done), row in zip(group, outs):
+        for done, row in zip(group, outs):
             done.put(row)
 
     def stats(self):
@@ -140,7 +167,8 @@ class Client:
         for _ in range(self._n):
             while len(pending) >= self._window:
                 drain_one()
-            prompt = self._rng.integers(0, self._vocab, self._plen)
+            prompt = self._rng.integers(0, self._vocab, self._plen,
+                                        dtype=np.int32)
             pending.append((time.monotonic(),
                             self._batcher.futures.submit(prompt)))
         while pending:

@@ -7,6 +7,7 @@ import multiprocessing as mp
 import json
 import os
 import time
+import weakref
 
 import numpy as np
 import pytest
@@ -130,6 +131,119 @@ def test_shm_refuses_run_and_private(shm_server):
     with _shm_client(srv, name) as cli:
         with pytest.raises(courier.RemoteError):
             cli.run()
+
+
+# ---- zero-copy slot pool: leases, overlap, unlink ---------------------------
+
+BIG = 256 * 1024  # comfortably over SPILL_THRESHOLD
+
+
+def test_zero_copy_reply_aliases_slot_and_is_read_only(shm_server):
+    srv, name = shm_server
+    with _shm_client(srv, name) as cli:
+        big = np.arange(BIG, dtype=np.uint8)
+        out = cli.echo(big)
+        np.testing.assert_array_equal(out, big)
+        assert not out.flags.writeable  # aliases the slot: read-only
+        assert isinstance(ser.owner_of(out), shm.SlotLease)
+        # materialize detaches: owned memory, no lease attached
+        copied = courier.materialize(out)
+        assert ser.owner_of(copied) is None
+        np.testing.assert_array_equal(copied, big)
+        lease_ref = weakref.ref(ser.owner_of(out))
+        del out
+        # Refcount-prompt free: the lease dies with the object graph
+        # (no gc cycle), returning the slot to the pool.
+        assert lease_ref() is None
+        pools = cli.transport._conn._in._pools_attached
+        assert pools and all(p.all_free for p in pools.values())
+
+
+def test_pipelined_large_messages_overlap_not_serialize(shm_server):
+    """A held reply lease pins its slot; further large calls must use
+    other slots of the pool instead of deadlocking on the first."""
+    srv, name = shm_server
+    with _shm_client(srv, name) as cli:
+        first = cli.echo(np.full(BIG, 1, np.uint8))  # lease held
+        second = cli.echo(np.full(BIG, 2, np.uint8))
+        third = cli.echo(np.full(BIG, 3, np.uint8))
+        assert first[0] == 1 and second[0] == 2 and third[0] == 3
+        # and concurrently, via futures (in-flight > 1 at once)
+        futs = [cli.futures.echo(np.full(BIG, 10 + i, np.uint8))
+                for i in range(shm.SLOT_COUNT + 2)]  # > pool size: expands
+        outs = [f.result(30) for f in futs]
+        assert [int(o[0]) for o in outs] == [10 + i for i in range(
+            shm.SLOT_COUNT + 2)]
+
+
+def test_slot_pool_reuses_slots_without_growth(shm_server):
+    srv, name = shm_server
+    with _shm_client(srv, name) as cli:
+        conn_id = cli.transport._conn._conn_id
+        big = np.zeros(BIG, np.uint8)
+        for _ in range(3 * shm.SLOT_COUNT):  # results dropped each loop
+            cli.echo(big)
+        if os.path.isdir("/dev/shm"):
+            segs = [f for f in os.listdir("/dev/shm")
+                    if f.startswith(conn_id)]
+            # two rings + at most one pool per direction
+            assert len(segs) <= 4, segs
+
+
+def test_lease_outlives_transport_close_no_segfault_no_leak(shm_server):
+    """A decoded view kept past close() must stay readable (the mapping
+    outlives the unlink), while every segment name is gone from /dev/shm
+    — and the final lease release must drop the mapping."""
+    srv, name = shm_server
+    cli = _shm_client(srv, name)
+    big = np.arange(BIG, dtype=np.uint8)
+    kept = cli.echo(big)
+    lease_ref = weakref.ref(ser.owner_of(kept))
+    conn_id = cli.transport._conn._conn_id
+    cli.close()
+    if os.path.isdir("/dev/shm"):
+        time.sleep(0.1)
+        leftovers = [f for f in os.listdir("/dev/shm")
+                     if f.startswith(conn_id)]
+        assert not leftovers, leftovers  # unlinked eagerly on close
+    np.testing.assert_array_equal(kept, big)  # mapping still alive
+    del kept
+    assert lease_ref() is None  # final release: mapping dropped too
+
+
+def test_explicit_lease_release_frees_slot(shm_server):
+    srv, name = shm_server
+    with _shm_client(srv, name) as cli:
+        out = cli.echo(np.zeros(BIG, np.uint8))
+        lease = ser.owner_of(out)
+        assert not lease.released
+        lease.release()  # consumer opts out early (data may be reused)
+        assert lease.released
+        lease.release()  # idempotent
+        pools = cli.transport._conn._in._pools_attached
+        assert all(p.all_free for p in pools.values())
+
+
+def test_copy_mode_roundtrip_and_detached_results(shm_server):
+    """zero_copy=False (the bench A/B baseline arm) must behave like
+    PR-2: results are copies, no lease attached."""
+    srv, name = shm_server
+    t = ShmTransport(name, zero_copy=False)
+    try:
+        big = np.arange(BIG, dtype=np.uint8)
+        out = t.call("echo", (big,), {})
+        np.testing.assert_array_equal(out, big)
+        assert ser.owner_of(out) is None
+    finally:
+        t.close()
+
+
+def test_slot_pool_growth_across_message_sizes(shm_server):
+    srv, name = shm_server
+    with _shm_client(srv, name) as cli:
+        for size in (128 * 1024, 1 << 20, 4 << 20, 256 * 1024):
+            big = np.full(size, size % 251, np.uint8)
+            np.testing.assert_array_equal(cli.echo(big), big)
 
 
 # ---- endpoint selection / fallback ------------------------------------------
