@@ -1,5 +1,7 @@
-"""Batched-serving driver (thin wrapper over repro.launch.serve):
-clients -> batcher -> SPMD model server, with latency percentiles.
+"""Serving driver (thin wrapper over repro.launch.serve):
+clients -> thin-admission batcher -> continuous-batching engine server,
+with latency percentiles. ``--mode lockstep`` runs the batch-at-a-time
+baseline instead.
 
     PYTHONPATH=src python examples/serve_lm.py --clients 3 --requests 4
 """

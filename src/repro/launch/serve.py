@@ -1,20 +1,36 @@
-"""Batched LM serving as a Launchpad program.
+"""LM serving as a Launchpad program — continuous batching by default.
 
     frontend clients (CourierNode × N)
-      -> batcher (CourierNode: request queue -> batched generate)
-      -> model server (MeshWorkerNode: prefill + decode over its mesh)
+      -> batcher (CourierNode: thin admission queue, per-request replies)
+      -> model server (MeshWorkerNode: ServeEngine over a slotted KV cache)
 
-The batcher implements continuous request coalescing: it drains up to
-``max_batch`` queued prompts, pads them to one batch, and runs
-prefill+decode once — the standard serving pattern expressed as Launchpad
-topology.
+Two serving modes share the topology (``--mode``):
+
+``continuous`` (default)
+    The model server runs a :class:`repro.serve.engine.ServeEngine`: a
+    persistent decode loop over a fixed pool of KV-cache slots. The
+    batcher forwards each request as its own ``futures.generate`` RPC;
+    the engine admits it into a free slot between decode steps and the
+    reply streams back the moment that one sequence finishes.
+
+``lockstep``
+    The PR-3-era baseline, kept for paired A/B: the batcher drains up to
+    ``max_batch`` queued prompts, pads them into one batch, and the
+    server runs prefill+decode once per batch — every request waits for
+    a batch boundary and the whole batch waits for its slowest member.
+    Ragged groups are now served *correctly*: the batcher sends the true
+    lengths and ``generate`` decodes each row at its own position, so
+    pad tokens are never attended as context.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 12
+    PYTHONPATH=src python -m repro.launch.serve --mode lockstep
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
+import json
 import queue
 import threading
 import time
@@ -25,9 +41,13 @@ from repro import configs, core as lp
 from repro.models.config import ModelConfig
 from repro.serve import decode as serve_lib
 
+# Bounded, thread-safe history for Batcher.stats(): the worker thread
+# appends per-batch sizes while stats() RPCs read concurrently.
+STATS_WINDOW = 256
+
 
 class ModelServer:
-    """Holds params; serves batched generate() on its mesh.
+    """Lockstep baseline: holds params; serves batched generate() on its mesh.
 
     ``prompts`` arrives over courier as a read-only array that may alias
     shared transport memory (the shm slot pool) — ``jnp.asarray`` device-
@@ -42,53 +62,110 @@ class ModelServer:
         self._max_new = max_new
         self._params = transformer.init_params(model_cfg, jax.random.key(0))
 
-    def generate(self, prompts):
+    def generate(self, prompts, lengths=None):
         import jax.numpy as jnp
         toks = jnp.asarray(np.asarray(prompts, np.int32))
         out = serve_lib.generate(self._cfg, self._params, toks,
                                  max_new=self._max_new,
-                                 context_len=toks.shape[1] + self._max_new)
+                                 context_len=toks.shape[1] + self._max_new,
+                                 lengths=None if lengths is None
+                                 else np.asarray(lengths, np.int32))
         return np.asarray(out)
 
 
+class EngineServer:
+    """Continuous-batching model server: a ServeEngine on this mesh worker.
+
+    ``generate`` blocks its RPC handler thread until that one sequence
+    retires — the courier server's handler pool is what lets many
+    requests ride the engine concurrently, each reply streaming back
+    per-request instead of per-batch.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, max_new: int = 8,
+                 num_slots: int = 8, context_len: int | None = None,
+                 eos_id: int | None = None, request_timeout_s: float = 120.0,
+                 mesh=None):
+        import jax
+        from repro.models import transformer
+        from repro.serve.engine import ServeEngine
+        self._cfg = model_cfg
+        self._timeout = request_timeout_s
+        params = transformer.init_params(model_cfg, jax.random.key(0))
+        self._engine = ServeEngine(
+            model_cfg, params, num_slots=num_slots,
+            context_len=context_len or 128,
+            max_new=max_new, eos_id=eos_id)
+        self._engine.start()
+
+    def generate(self, prompt):
+        fut = self._engine.submit(np.asarray(prompt, np.int32).reshape(-1))
+        from concurrent import futures as cf
+        try:
+            return fut.result(timeout=self._timeout)
+        except cf.TimeoutError:
+            # A queued (not yet admitted) request is cancellable: don't
+            # let an abandoned reply go on to occupy a slot.
+            fut.cancel()
+            raise
+
+    def stats(self):
+        return self._engine.stats()
+
+
 class Batcher:
-    """Coalesces concurrent requests into model-server batches.
+    """Admission front for the model server.
 
-    The model server is driven through ``futures.generate`` so the batcher
-    thread goes straight back to coalescing the next group while the mesh
-    is still computing the previous one (bounded by ``max_inflight``),
-    instead of blocking on one RPC per batch.
+    ``mode="continuous"``: thin pass-through — each ``submit`` forwards
+    the prompt as its own ``futures.generate`` RPC and blocks its handler
+    thread for that one reply; all batching happens inside the engine at
+    decode-step granularity.
 
-    Queued prompts are kept as the transport handed them over — over the
-    shm transport that is a zero-copy read-only view aliasing a shared-
-    memory slot — and are copied exactly once, into the padded batch
-    array. (The slot lease itself stays pinned by each blocked
-    ``submit()`` frame until its reply is delivered, so pool residency is
-    bounded by in-flight requests — fine for prompt-sized payloads; the
-    zero-copy win is on the large generate() replies.) Ragged groups are
-    right-padded with token 0; the model sees pad tokens as context
-    (generate() has no length mask), so callers wanting exact ragged
-    semantics should submit equal-length prompts per group.
+    ``mode="lockstep"``: the classic coalescing worker (the A/B
+    baseline). The model server is driven through ``futures.generate`` so
+    the batcher thread goes straight back to coalescing the next group
+    while the mesh is still computing the previous one (bounded by
+    ``max_inflight``). Queued prompts are kept as the transport handed
+    them over (zero-copy views) and copied exactly once into the padded
+    batch; the true lengths ride along so ragged groups decode at their
+    own positions instead of attending to pad tokens.
     """
 
     def __init__(self, server, max_batch: int = 8, max_wait_s: float = 0.02,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2, mode: str = "continuous",
+                 request_timeout_s: float = 150.0):
+        if mode not in ("continuous", "lockstep"):
+            raise ValueError(f"unknown serve mode {mode!r}")
         self._server = server
+        self._mode = mode
+        # Above the engine server's own per-request timeout, so a server-
+        # side timeout surfaces as the reply instead of racing this one.
+        self._timeout = request_timeout_s
         self._q: queue.Queue = queue.Queue()
         self._max_batch = max_batch
         self._max_wait = max_wait_s
         self._inflight = threading.Semaphore(max_inflight)
-        self._worker = threading.Thread(target=self._loop, daemon=True)
-        self._worker.start()
-        self.batches = []
+        self._stats_lock = threading.Lock()
+        self._batches = collections.deque(maxlen=STATS_WINDOW)
+        self._submitted = 0
+        if mode == "lockstep":
+            self._worker = threading.Thread(target=self._loop, daemon=True)
+            self._worker.start()
 
     def submit(self, prompt):
         """Blocking request: returns the completed sequence."""
+        with self._stats_lock:
+            self._submitted += 1
+        if self._mode == "continuous":
+            # Thin admission: one request, one RPC, one streamed reply.
+            fut = self._server.futures.generate(
+                np.asarray(prompt, np.int32))
+            return fut.result(timeout=self._timeout)
         done = queue.Queue(maxsize=1)
         # asarray, not array: an int32 prompt (incl. a transport-owned
         # view) is queued as-is; the one copy happens in _loop's stack.
         self._q.put((np.asarray(prompt, np.int32), done))
-        out = done.get(timeout=120)
+        out = done.get(timeout=self._timeout)
         if isinstance(out, BaseException):
             raise out
         return out
@@ -110,14 +187,15 @@ class Batcher:
             # (right-padded with 0 when lengths differ). Rebinding
             # ``group`` to the reply queues drops this thread's prompt
             # references before the batch RPC goes out.
-            width = max(len(g[0]) for g in group)
-            prompts = np.zeros((len(group), width), np.int32)
+            lengths = np.array([len(g[0]) for g in group], np.int32)
+            prompts = np.zeros((len(group), int(lengths.max())), np.int32)
             for row, (p, _) in zip(prompts, group):
                 row[:len(p)] = p
             group = [done for _, done in group]
             self._inflight.acquire()
-            fut = self._server.futures.generate(prompts)
-            self.batches.append(len(group))
+            fut = self._server.futures.generate(prompts, lengths)
+            with self._stats_lock:
+                self._batches.append(len(group))
             fut.add_done_callback(
                 lambda f, group=group: self._deliver(group, f))
 
@@ -133,7 +211,10 @@ class Batcher:
             done.put(row)
 
     def stats(self):
-        return {"batches": list(self.batches)}
+        with self._stats_lock:
+            return {"mode": self._mode,
+                    "submitted": self._submitted,
+                    "batches": list(self._batches)}
 
 
 class Client:
@@ -141,7 +222,7 @@ class Client:
 
     Requests go out as ``futures.submit`` with up to ``window`` in flight
     (rather than one blocking RPC per request), which is what actually
-    gives the batcher concurrent prompts to coalesce. Latency samples are
+    gives the serving side concurrent prompts. Latency samples are
     flushed to the meter in a single ``batch_call`` — N records, one frame.
     """
 
@@ -178,8 +259,12 @@ class Client:
 
 
 class Meter:
-    def __init__(self, expected: int):
+    """Collects request latencies; prints percentiles and (optionally)
+    writes the summary to a JSON file before stopping the program."""
+
+    def __init__(self, expected: int, summary_path: str | None = None):
         self._expected = expected
+        self._summary_path = summary_path
         self._lat = []
         self._lock = threading.Lock()
 
@@ -189,23 +274,37 @@ class Meter:
             done = len(self._lat) >= self._expected
         if done:
             lat = np.array(self._lat)
-            print(f"served {len(lat)} requests: "
-                  f"p50={np.percentile(lat, 50)*1e3:.1f}ms "
-                  f"p95={np.percentile(lat, 95)*1e3:.1f}ms")
+            summary = {"count": int(lat.size),
+                       "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                       "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                       "mean_ms": float(lat.mean() * 1e3)}
+            print(f"served {summary['count']} requests: "
+                  f"p50={summary['p50_ms']:.1f}ms "
+                  f"p95={summary['p95_ms']:.1f}ms")
+            if self._summary_path:
+                with open(self._summary_path, "w") as f:
+                    json.dump(summary, f, indent=2)
+                    f.write("\n")
             lp.stop_program()
 
 
 def build_program(model_cfg: ModelConfig, *, num_clients=3,
-                  requests_per_client=4, prompt_len=8,
-                  max_new=8) -> lp.Program:
+                  requests_per_client=4, prompt_len=8, max_new=8,
+                  mode: str = "continuous", num_slots: int = 8,
+                  meter_json: str | None = None) -> lp.Program:
     p = lp.Program(f"serve-{model_cfg.name}")
     with p.group("server"):
-        server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
-                                              max_new=max_new))
+        if mode == "continuous":
+            server = p.add_node(lp.MeshWorkerNode(
+                EngineServer, model_cfg, max_new=max_new,
+                num_slots=num_slots, context_len=prompt_len + max_new))
+        else:
+            server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
+                                                  max_new=max_new))
     with p.group("batcher"):
-        batcher = p.add_node(lp.CourierNode(Batcher, server))
+        batcher = p.add_node(lp.CourierNode(Batcher, server, mode=mode))
     meter = p.add_node(lp.CourierNode(
-        Meter, num_clients * requests_per_client))
+        Meter, num_clients * requests_per_client, summary_path=meter_json))
     with p.group("client"):
         for i in range(num_clients):
             p.add_node(lp.CourierNode(
@@ -220,11 +319,19 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--requests", type=int, default=4,
                     help="requests per client")
+    ap.add_argument("--mode", choices=("continuous", "lockstep"),
+                    default="continuous")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="KV-cache slots (continuous mode)")
+    ap.add_argument("--meter-json", default=None,
+                    help="write the latency percentile summary here")
     args = ap.parse_args(argv)
     cfg = (configs.get_reduced(args.arch) if args.arch
            else configs.get_reduced("qwen2-1.5b"))
     program = build_program(cfg, num_clients=args.clients,
-                            requests_per_client=args.requests)
+                            requests_per_client=args.requests,
+                            mode=args.mode, num_slots=args.slots,
+                            meter_json=args.meter_json)
     print(program)
     lp.launch_and_wait(program, timeout_s=600)
 

@@ -300,17 +300,25 @@ def _sdpa_grouped(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
 
 def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
                      t: jax.Array, kind: str) -> tuple[jax.Array, dict]:
-    """x [B,1,D]; ``t`` is the absolute position of the new token.
+    """x [B,1,D]; ``t`` is the absolute position of the new token — a
+    scalar (all rows in lockstep) or a ``[B]`` vector (continuous batching:
+    each cache row advances independently, so slots holding sequences of
+    different lengths decode together in one step).
 
     The cache ring-buffers the last ``L`` tokens (L = full context or the
-    SWA window). Returns (attn output [B,1,D], updated cache).
+    SWA window). Slots past a row's own ``t`` are masked invalid by the
+    ring-position arithmetic, which is what makes ragged admission (and
+    right-padded prefill leftovers in those slots) correct rather than
+    attended-to garbage. Returns (attn output [B,1,D], updated cache).
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
     window = cfg.window if kind in ("swa", "local") else None
 
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))     # per-row t
+
     q, k_new, v_new = _project_qkv(cfg, p, x, x)
-    pos_new = jnp.full((B, 1), t, jnp.int32)
+    pos_new = tb[:, None]
     if cfg.rope:
         sin, cos = layers.rope_freqs(cfg, pos_new)
         q = layers.apply_rope(q, sin, cos)
@@ -319,20 +327,21 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     # Ring write via mask-select, NOT dynamic_update_slice: a DUS onto the
     # TP-sharded cache-length dim makes the partitioner all-gather the whole
     # cache every layer; the where() is elementwise along L and stays local.
-    slot = jnp.mod(t, L)
-    lane = jnp.arange(L, dtype=jnp.int32)[None, :, None, None] == slot
+    slot = jnp.mod(tb, L)                                      # [B]
+    lane = (jnp.arange(L, dtype=jnp.int32)[None, :, None, None]
+            == slot[:, None, None, None])
     k = jnp.where(lane, k_new.astype(cache["k"].dtype), cache["k"])
     v = jnp.where(lane, v_new.astype(cache["v"].dtype), cache["v"])
 
     # Absolute position of every cache slot given the ring layout: slot i
     # holds the most recent token congruent to i mod L that is <= t.
-    idx = jnp.arange(L, dtype=jnp.int32)
-    k_pos = t - jnp.mod(t - idx, L)          # in (t-L, t]
+    idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+    k_pos = tb[:, None] - jnp.mod(tb[:, None] - idx, L)        # in (t-L, t]
     valid = k_pos >= 0
     if window is not None:
-        valid &= (t - k_pos) < window
+        valid &= (tb[:, None] - k_pos) < window
     bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
-    bias = jnp.broadcast_to(bias[None, None, None, :], (B, 1, 1, L))
+    bias = bias[:, None, None, :]                              # [B,1,1,L]
 
     out = _sdpa_grouped(cfg, q, k.astype(q.dtype), v.astype(q.dtype), bias)
     out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)

@@ -357,6 +357,34 @@ def init_decode_state(cfg: ModelConfig, batch: int, context_len: int,
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
 
+def write_decode_slot(cfg: ModelConfig, state: dict, slot_state: dict,
+                      index) -> dict:
+    """Write a batch-1 decode-state tree into row ``index`` of a batched one.
+
+    ``state`` is the engine's slotted cache (``init_decode_state`` with
+    batch = num_slots); ``slot_state`` comes from ``prefill`` over a
+    ``[1, S]`` prompt with the same ``context_len``. Leaves under "blocks"
+    carry the stacked repeat dim first (batch is axis 1); "tail" leaves
+    are batch-leading (axis 0). ``index`` may be traced, so a jitted
+    wrapper (ideally donating ``state``) admits a request into a free slot
+    without touching the other rows.
+    """
+    def _write(axis):
+        def f(dst, src):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), index, axis=axis)
+        return f
+
+    out: dict[str, Any] = {}
+    if "blocks" in state:
+        out["blocks"] = jax.tree.map(_write(1), state["blocks"],
+                                     slot_state["blocks"])
+    if "tail" in state:
+        out["tail"] = jax.tree.map(_write(0), state["tail"],
+                                   slot_state["tail"])
+    return out
+
+
 def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
                   state: dict, t: jax.Array):
     h = layers.apply_norm(cfg, p["norm"], x)
@@ -389,7 +417,9 @@ def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: dict, state: dict,
                 tokens: jax.Array, t: jax.Array):
-    """One decode step. tokens [B,1] int32; t = absolute position (scalar).
+    """One decode step. tokens [B,1] int32; t = absolute position — scalar
+    (lockstep batch) or ``[B]`` vector (continuous batching / ragged rows,
+    each cache row at its own position).
 
     Returns (logits [B,1,V], new_state).
     """

@@ -43,27 +43,87 @@ def make_prefill(cfg: ModelConfig, context_len: Optional[int] = None):
     return prefill_step
 
 
+# Jitted-executable caches for generate(): make_serve_step/make_prefill
+# return fresh closures, so a bare jax.jit around them would recompile on
+# EVERY generate() call — ~seconds per serving batch, dwarfing the actual
+# step. Keyed on (cfg, temperature/context_len); ModelConfig is frozen.
+@functools.lru_cache(maxsize=None)
+def _cached_step(cfg: ModelConfig, temperature: float):
+    return jax.jit(make_serve_step(cfg, temperature))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_prefill(cfg: ModelConfig, context_len: int):
+    return jax.jit(make_prefill(cfg, context_len))
+
+
+_MASKABLE = {"attn", "swa", "local", "xattn"}
+
+
+def _check_ragged_supported(cfg: ModelConfig, S: int, context_len: int):
+    kinds = set(cfg.pattern) | set(cfg.remainder)
+    if kinds - _MASKABLE:
+        raise ValueError(
+            f"ragged generate (lengths=...) needs an attention-only stack; "
+            f"{cfg.name} has {sorted(kinds - _MASKABLE)} blocks whose "
+            "recurrent state would absorb the pad tokens. Serve those "
+            "architectures through the engine (exact-length prefill) or "
+            "with equal-length prompts.")
+    if context_len < S or (cfg.window is not None and cfg.window < S):
+        raise ValueError(
+            f"ragged generate needs the KV ring (context_len={context_len}, "
+            f"window={cfg.window}) to hold the padded prompt (S={S}): a "
+            "shorter ring wraps pad K/V onto slots the position mask "
+            "treats as valid history.")
+
+
 def generate(cfg: ModelConfig, params, prompt: jax.Array, max_new: int,
              context_len: Optional[int] = None, temperature: float = 0.0,
-             key: Optional[jax.Array] = None, memory=None):
+             key: Optional[jax.Array] = None, memory=None,
+             lengths: Optional[jax.Array] = None):
     """Convenience loop for examples/tests: prefill + greedy decode.
 
     prompt [B, S] -> tokens [B, S + max_new].
+
+    ``lengths`` ([B] int, optional) marks the true length of each
+    right-padded row. With it, row ``b``'s continuation is sampled from the
+    logits at its own last real token and decoded at per-row positions
+    ``lengths[b] + i`` — pad K/V beyond a row's length sits at ring slots
+    the decode position mask rejects (and decode overwrites them in order),
+    so a padded row matches the same prompt served alone instead of
+    attending to pad tokens as context. Generated tokens land at
+    ``out[b, lengths[b]:lengths[b]+max_new]``; the tail keeps the pad.
     """
+    import numpy as np
     B, S = prompt.shape
     context_len = context_len or (S + max_new)
-    logits, state = transformer.prefill(cfg, params, tokens=prompt,
-                                        memory=memory,
-                                        context_len=context_len)
-    last = sample_from_logits(logits[:, -1:], key, temperature)
-    step = jax.jit(make_serve_step(cfg, temperature))
-    out = [prompt, last]
+    if lengths is not None and bool((np.asarray(lengths) == S).all()):
+        lengths = None          # nothing is padded: every stack serves this
+    if lengths is not None:
+        _check_ragged_supported(cfg, S, context_len)
+        t0 = jnp.asarray(lengths, jnp.int32)
+    else:
+        t0 = jnp.full((B,), S, jnp.int32)
+    if memory is None:
+        logits, state = _cached_prefill(cfg, context_len)(params,
+                                                          tokens=prompt)
+    else:  # VLM memory is test-only; skip the executable cache
+        logits, state = transformer.prefill(cfg, params, tokens=prompt,
+                                            memory=memory,
+                                            context_len=context_len)
+    last_logits = jnp.take_along_axis(logits, (t0 - 1)[:, None, None], axis=1)
+    last = sample_from_logits(last_logits, key, temperature)
+    step = _cached_step(cfg, temperature)
+    gen = [last]
     tok = last
     for i in range(max_new - 1):
         if key is not None:
             key, sub = jax.random.split(key)
         else:
             sub = None
-        tok, state = step(params, state, tok, jnp.int32(S + i), sub)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1)
+        tok, state = step(params, state, tok, t0 + i, sub)
+        gen.append(tok)
+    gen = jnp.concatenate(gen, axis=1)                     # [B, max_new]
+    out = jnp.zeros((B, S + max_new), prompt.dtype).at[:, :S].set(prompt)
+    cols = t0[:, None] + jnp.arange(max_new, dtype=jnp.int32)[None, :]
+    return out.at[jnp.arange(B)[:, None], cols].set(gen)

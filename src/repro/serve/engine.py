@@ -1,0 +1,320 @@
+"""Continuous-batching decode engine over a slotted KV cache.
+
+The lockstep serving path (drain a queue, pad a batch, run
+prefill+decode, reply per batch) makes every request wait for a batch
+boundary and the whole batch wait for its slowest member. This engine
+replaces that with *iteration-level* scheduling:
+
+  * the KV cache is a fixed pool of ``num_slots`` rows
+    (``transformer.init_decode_state`` with batch = num_slots);
+  * a persistent decode loop steps ALL occupied slots together, each at
+    its own absolute position (``decode_step`` with a per-row ``t``
+    vector — ring-position masking keeps ragged rows correct);
+  * arrivals are admitted into free slots *between* decode steps: the
+    request is prefilled alone at its exact prompt length and its
+    per-layer state is written into the free row with
+    ``transformer.write_decode_slot`` (a donated dynamic-update, so
+    admission never copies or perturbs in-flight rows);
+  * a sequence retires the moment it finishes (EOS or its ``max_new``
+    budget) and its slot is immediately reusable — nobody waits for a
+    batch-mate;
+  * replies stream back per request through ``concurrent.futures``.
+
+Exact-length prefill (no padding) keeps admission correct for every
+``decode_supported`` architecture, including the recurrent ones
+(RG-LRU / Mamba) whose state a padded prefill would pollute; jit caches
+one prefill executable per distinct prompt length. Requests that cannot
+ever fit (prompt + max_new > context_len) fail their own future at
+submit time — they never poison a step, and the queue keeps serving
+everyone else. A full pool queues requests (FCFS) instead of erroring.
+
+MoE caveat: expert routing under a capacity factor couples rows through
+the shared capacity budget, so MoE decode in a shared pool is not
+bit-identical to serving the same request alone (dense / recurrent
+stacks are).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import queue
+import threading
+import time
+from concurrent import futures as cf
+from typing import Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class _Request:
+    prompt: np.ndarray            # [S] int32, detached copy
+    max_new: int
+    future: cf.Future
+    submitted: float
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: _Request
+    t: int                        # absolute position of the next token fed
+    generated: list
+
+
+class ServeEngine:
+    """Continuous-batching serve engine.
+
+    ``submit()`` is thread-safe and returns a ``concurrent.futures.Future``
+    resolving to the full sequence (prompt + generated tokens, int32).
+    Drive the engine either with ``start()`` (daemon decode loop — the
+    serving deployment) or by calling ``step()`` directly from one thread
+    (deterministic, used by tests and benchmarks).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
+                 context_len: int = 64, max_new: int = 16,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0):
+        import jax
+        from repro.models import transformer
+        from repro.serve import decode as serve_lib
+
+        if not cfg.decode_supported:
+            raise ValueError(f"{cfg.name} has no autoregressive decode step")
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self._cfg = cfg
+        self._params = params
+        self._ns = num_slots
+        self._L = context_len
+        self._max_new = max_new
+        self._eos = eos_id
+        self._temp = temperature
+        self._key = jax.random.key(seed) if temperature else None
+
+        self._state = transformer.init_decode_state(cfg, num_slots,
+                                                    context_len)
+        self._slots: list[Optional[_Slot]] = [None] * num_slots
+        self._free: list[int] = list(range(num_slots - 1, -1, -1))
+        self._tokens = np.zeros((num_slots, 1), np.int32)   # next feed
+        self._t = np.zeros((num_slots,), np.int32)          # per-row pos
+
+        self._decode = jax.jit(serve_lib.make_serve_step(cfg, temperature),
+                               donate_argnums=(1,))
+
+        def _prefill_fn(params, tokens, key=None):
+            logits, state = transformer.prefill(cfg, params, tokens=tokens,
+                                                context_len=context_len)
+            nxt = serve_lib.sample_from_logits(logits[:, -1:], key,
+                                               temperature)
+            return nxt, state
+
+        # One executable per distinct prompt length (jit's shape cache).
+        self._prefill = jax.jit(_prefill_fn)
+        self._write = jax.jit(
+            functools.partial(transformer.write_decode_slot, cfg),
+            donate_argnums=(0,))
+
+        self._queue: queue.Queue[_Request] = queue.Queue()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        self._lock = threading.Lock()                       # stats + lifecycle
+        self._counters = dict(submitted=0, admitted=0, retired=0, failed=0,
+                              steps=0, decode_tokens=0, generated_tokens=0,
+                              occupancy_sum=0, peak_occupancy=0)
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, prompt, max_new: Optional[int] = None) -> cf.Future:
+        """Enqueue one request; resolves to [S + n_generated] int32.
+
+        The prompt is copied (a transport-owned zero-copy view is safe to
+        hand in; its lease is released as soon as submit returns). A
+        request that cannot fit the slot ring fails its own future here —
+        per-request delivery, no effect on its neighbours.
+        """
+        fut: cf.Future = cf.Future()
+        prompt = np.asarray(prompt, np.int32).reshape(-1).copy()
+        mn = self._max_new if max_new is None else int(max_new)
+        if prompt.size == 0:
+            fut.set_exception(ValueError("empty prompt"))
+            return fut
+        if prompt.size + mn > self._L:
+            fut.set_exception(ValueError(
+                f"prompt ({prompt.size}) + max_new ({mn}) exceeds the "
+                f"engine's context_len ({self._L})"))
+            return fut
+        with self._lock:
+            # The put happens under the same lock stop() takes before
+            # draining, so a request can never slip into the queue after
+            # the drain and hang its caller.
+            if self._closed:
+                fut.set_exception(RuntimeError("engine stopped"))
+                return fut
+            self._counters["submitted"] += 1
+            self._queue.put(_Request(prompt, mn, fut, time.monotonic()))
+        self._wake.set()
+        return fut
+
+    # -- engine side ---------------------------------------------------------
+    def _admit(self) -> None:
+        """Move queued requests into free slots: exact-length prefill, then
+        write the fresh per-layer state into the slot's cache row."""
+        import jax.numpy as jnp
+        while self._free:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if not req.future.set_running_or_notify_cancel():
+                continue                                    # cancelled
+            i = self._free.pop()
+            try:
+                key = self._split_key()
+                nxt, slot_state = self._prefill(
+                    self._params, jnp.asarray(req.prompt[None]), key)
+                self._state = self._write(self._state, slot_state,
+                                          jnp.int32(i))
+                first = int(np.asarray(nxt)[0, 0])
+            except Exception as exc:                        # noqa: BLE001
+                # Per-request failure delivery: the slot goes straight back
+                # and the step proceeds for everyone else.
+                self._free.append(i)
+                with self._lock:
+                    self._counters["failed"] += 1
+                req.future.set_exception(exc)
+                continue
+            self._slots[i] = _Slot(request=req, t=len(req.prompt),
+                                   generated=[first])
+            self._t[i] = len(req.prompt)
+            self._tokens[i, 0] = first
+            with self._lock:
+                self._counters["admitted"] += 1
+            if (self._eos is not None and first == self._eos) \
+                    or req.max_new <= 1:
+                self._retire(i)
+
+    def _split_key(self):
+        if self._key is None:
+            return None
+        import jax
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def step(self) -> int:
+        """One engine iteration: admit arrivals, then decode every occupied
+        slot one token. Returns the number of slots that decoded (0 =
+        idle). Call from a single driver thread only."""
+        import jax.numpy as jnp
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return 0
+        nxt, self._state = self._decode(
+            self._params, self._state, jnp.asarray(self._tokens),
+            jnp.asarray(self._t), self._split_key())
+        nxt = np.asarray(nxt)
+        with self._lock:
+            c = self._counters
+            c["steps"] += 1
+            c["decode_tokens"] += len(active)
+            c["occupancy_sum"] += len(active)
+            c["peak_occupancy"] = max(c["peak_occupancy"], len(active))
+        for i in active:
+            slot = self._slots[i]
+            tok = int(nxt[i, 0])
+            slot.generated.append(tok)
+            slot.t += 1
+            self._t[i] = slot.t
+            self._tokens[i, 0] = tok
+            if (self._eos is not None and tok == self._eos) \
+                    or len(slot.generated) >= slot.request.max_new:
+                self._retire(i)
+        return len(active)
+
+    def _retire(self, i: int) -> None:
+        slot = self._slots[i]
+        self._slots[i] = None
+        self._free.append(i)
+        self._tokens[i, 0] = 0
+        self._t[i] = 0
+        out = np.concatenate([slot.request.prompt,
+                              np.asarray(slot.generated, np.int32)])
+        with self._lock:
+            self._counters["retired"] += 1
+            self._counters["generated_tokens"] += len(slot.generated)
+        slot.request.future.set_result(out)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ServeEngine":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="serve-engine")
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if self.step() == 0:
+                self._wake.wait(timeout=0.05)
+                self._wake.clear()
+
+    def stop(self) -> None:
+        """Stop the loop and fail anything still queued or in flight."""
+        with self._lock:
+            self._closed = True
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        err = RuntimeError("engine stopped")
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(err)
+        for i, slot in enumerate(self._slots):
+            if slot is not None:
+                self._slots[i] = None
+                self._free.append(i)
+                slot.request.future.set_exception(err)
+
+    def __enter__(self) -> "ServeEngine":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def num_slots(self) -> int:
+        return self._ns
+
+    @property
+    def context_len(self) -> int:
+        return self._L
+
+    def reset_stats(self) -> None:
+        """Zero the counters (benchmarks: exclude warmup/compile from the
+        measured window while keeping the warmed jit caches)."""
+        with self._lock:
+            for k in self._counters:
+                self._counters[k] = 0
+
+    def stats(self) -> dict:
+        """Counters + derived occupancy; safe from any thread."""
+        with self._lock:
+            s = dict(self._counters)
+        s["num_slots"] = self._ns
+        s["free_slots"] = len(self._free)
+        s["queue_depth"] = self._queue.qsize()
+        s["mean_occupancy"] = (s["occupancy_sum"] / s["steps"]
+                               if s["steps"] else 0.0)
+        return s

@@ -1,0 +1,174 @@
+"""ServeEngine invariants: slotted-KV-cache admission, retirement, and
+per-request delivery semantics (continuous batching)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import decode as serve_lib
+from repro.serve.engine import ServeEngine
+
+CFG = configs.get_reduced("qwen2-1.5b")
+L = 24          # engine context (slot ring length)
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return transformer.init_params(CFG, jax.random.key(0))
+
+
+def _prompts(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _run(engine, futs, max_steps=500):
+    steps = 0
+    while not all(f.done() for f in futs):
+        engine.step()
+        steps += 1
+        assert steps < max_steps, "engine made no progress"
+
+
+def _solo(params, prompt, max_new=MAX_NEW):
+    import jax.numpy as jnp
+    return np.asarray(serve_lib.generate(
+        CFG, params, jnp.asarray(prompt[None]), max_new=max_new,
+        context_len=L))[0]
+
+
+def test_engine_matches_solo_serving(params):
+    """A request decoded in a shared slot pool must equal the same prompt
+    served alone (same ring length): slots are isolated."""
+    engine = ServeEngine(CFG, params, num_slots=3, context_len=L,
+                         max_new=MAX_NEW)
+    prompts = _prompts([5, 9, 7, 5, 12])
+    futs = [engine.submit(p) for p in prompts]
+    _run(engine, futs)
+    for p, f in zip(prompts, futs):
+        out = f.result()
+        assert out.shape == (len(p) + MAX_NEW,)
+        np.testing.assert_array_equal(out, _solo(params, p))
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "falcon-mamba-7b"])
+def test_engine_serves_recurrent_archs(arch):
+    """Exact-length admission keeps recurrent state (RG-LRU / Mamba)
+    correct — no pad tokens ever enter a prefill."""
+    cfg = configs.get_reduced(arch)
+    params = transformer.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9)]
+    engine = ServeEngine(cfg, params, num_slots=2, context_len=L,
+                         max_new=3)
+    futs = [engine.submit(p) for p in prompts]
+    _run(engine, futs)
+    import jax.numpy as jnp
+    for p, f in zip(prompts, futs):
+        solo = np.asarray(serve_lib.generate(
+            cfg, params, jnp.asarray(p[None]), max_new=3,
+            context_len=L))[0]
+        np.testing.assert_array_equal(f.result(), solo)
+
+
+def test_slot_reuse_and_full_pool_queues(params):
+    """More requests than slots: the pool queues (never errors), retired
+    slots are reused, and occupancy never exceeds the pool."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW)
+    prompts = _prompts([5] * 7, seed=2)
+    futs = [engine.submit(p) for p in prompts]
+    assert engine.stats()["queue_depth"] == 7     # nothing admitted yet
+    _run(engine, futs)
+    for p, f in zip(prompts, futs):
+        assert f.result().shape == (len(p) + MAX_NEW,)
+    s = engine.stats()
+    assert s["admitted"] == 7
+    assert s["retired"] == 7
+    assert s["peak_occupancy"] <= 2
+    assert s["free_slots"] == 2
+    assert s["queue_depth"] == 0
+
+
+def test_interleaved_admission_preserves_inflight_decode(params):
+    """Admitting B mid-flight (prefill + slot write between decode steps)
+    must not perturb A's in-flight rows, and vice versa."""
+    a, b = _prompts([6, 10], seed=3)
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW)
+    fa = engine.submit(a)
+    engine.step()
+    engine.step()                                 # A is mid-decode
+    fb = engine.submit(b)
+    _run(engine, [fa, fb])
+    np.testing.assert_array_equal(fa.result(), _solo(params, a))
+    np.testing.assert_array_equal(fb.result(), _solo(params, b))
+
+
+def test_per_request_failure_delivery(params):
+    """A request that cannot fit fails its own future; neighbours in the
+    same step complete untouched."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW)
+    good1 = engine.submit(_prompts([5], seed=4)[0])
+    bad = engine.submit(np.arange(L, dtype=np.int32))   # L + max_new > L
+    good2 = engine.submit(_prompts([7], seed=5)[0])
+    with pytest.raises(ValueError, match="context_len"):
+        bad.result(timeout=5)
+    _run(engine, [good1, good2])
+    assert good1.result().shape == (5 + MAX_NEW,)
+    assert good2.result().shape == (7 + MAX_NEW,)
+    assert engine.stats()["failed"] == 0          # rejected pre-queue
+    assert engine.stats()["retired"] == 2
+
+
+def test_eos_retires_slot_immediately(params):
+    """EOS retirement: with eos_id set to the token the model actually
+    emits first, the sequence retires after one generated token and its
+    slot frees for the next request."""
+    prompt = _prompts([6], seed=6)[0]
+    probe = ServeEngine(CFG, params, num_slots=1, context_len=L,
+                        max_new=MAX_NEW)
+    f = probe.submit(prompt)
+    _run(probe, [f])
+    first_tok = int(f.result()[len(prompt)])
+
+    engine = ServeEngine(CFG, params, num_slots=1, context_len=L,
+                         max_new=MAX_NEW, eos_id=first_tok)
+    f1 = engine.submit(prompt)
+    f2 = engine.submit(_prompts([9], seed=7)[0])
+    _run(engine, [f1, f2])
+    out = f1.result()
+    assert out.shape == (len(prompt) + 1,)        # stopped at EOS
+    assert out[-1] == first_tok
+    s = engine.stats()
+    assert s["retired"] == 2 and s["free_slots"] == 1
+
+
+def test_stop_fails_pending_requests(params):
+    engine = ServeEngine(CFG, params, num_slots=1, context_len=L,
+                         max_new=MAX_NEW)
+    fut = engine.submit(_prompts([5], seed=8)[0])
+    engine.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        fut.result(timeout=5)
+    with pytest.raises(RuntimeError, match="stopped"):
+        engine.submit(_prompts([5], seed=9)[0]).result(timeout=5)
+
+
+def test_background_loop_serves(params):
+    """The daemon decode loop: submit from this thread, replies stream
+    back per request through the futures."""
+    with ServeEngine(CFG, params, num_slots=2, context_len=L,
+                     max_new=MAX_NEW) as engine:
+        prompts = _prompts([5, 8, 11], seed=10)
+        futs = [engine.submit(p) for p in prompts]
+        for p, f in zip(prompts, futs):
+            assert f.result(timeout=120).shape == (len(p) + MAX_NEW,)
+    assert engine.stats()["retired"] == 3

@@ -82,10 +82,17 @@ def test_train_lm_end_to_end(tmp_path):
     assert CheckpointManager(str(tmp_path)).latest_step() == 12
 
 
-def test_serve_lm_end_to_end():
+@pytest.mark.parametrize("mode", ["continuous", "lockstep"])
+def test_serve_lm_end_to_end(mode, tmp_path):
     from repro import configs
     from repro.launch.serve import build_program
     cfg = configs.get_reduced("qwen2-1.5b")
+    meter_json = str(tmp_path / "serve_meter.json")
     program = build_program(cfg, num_clients=2, requests_per_client=2,
-                            prompt_len=8, max_new=4)
+                            prompt_len=8, max_new=4, mode=mode,
+                            meter_json=meter_json)
     lp.launch_and_wait(program, timeout_s=600)
+    import json
+    summary = json.load(open(meter_json))
+    assert summary["count"] == 4
+    assert summary["p95_ms"] >= summary["p50_ms"] > 0

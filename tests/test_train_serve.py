@@ -85,6 +85,49 @@ def test_generate_produces_tokens():
     assert bool((out[:, :8] == prompt).all())
 
 
+def test_generate_padded_row_matches_solo():
+    """Ragged-batch regression (the documented footgun): with ``lengths``
+    a right-padded row must continue from its own last real token —
+    identical to serving the same prompt alone — instead of attending to
+    pad tokens as context."""
+    cfg = configs.get_reduced("qwen2-1.5b")
+    params = transformer.init_params(cfg, jax.random.key(7))
+    rng = np.random.default_rng(7)
+    short = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    long_ = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    S, max_new = 12, 6
+    batch = np.zeros((2, S), np.int32)
+    batch[0, :5] = short
+    batch[1] = long_
+    out = np.asarray(serve_lib.generate(
+        cfg, params, jnp.asarray(batch), max_new=max_new,
+        context_len=S + max_new, lengths=np.array([5, 12])))
+    solo = np.asarray(serve_lib.generate(
+        cfg, params, jnp.asarray(short[None]), max_new=max_new,
+        context_len=S + max_new))
+    np.testing.assert_array_equal(out[0, 5:5 + max_new], solo[0, 5:])
+    np.testing.assert_array_equal(out[1, :12], long_)     # prompt intact
+    # the long (unpadded) row must behave exactly like the lengths-free path
+    plain = np.asarray(serve_lib.generate(
+        cfg, params, jnp.asarray(long_[None]), max_new=max_new,
+        context_len=S + max_new))
+    np.testing.assert_array_equal(out[1], plain[0])
+
+
+def test_generate_lengths_rejects_recurrent_stacks():
+    cfg = configs.get_reduced("falcon-mamba-7b")
+    params = transformer.init_params(cfg, jax.random.key(8))
+    batch = np.zeros((2, 8), np.int32)
+    with pytest.raises(ValueError, match="attention-only"):
+        serve_lib.generate(cfg, params, jnp.asarray(batch), max_new=2,
+                           lengths=np.array([4, 8]))
+    # Equal lengths == nothing padded: the lockstep Batcher always sends
+    # lengths, and that must keep working for every decode-capable stack.
+    out = serve_lib.generate(cfg, params, jnp.asarray(batch), max_new=2,
+                             lengths=np.array([8, 8]))
+    assert out.shape == (2, 10)
+
+
 def test_sliding_window_cache_ring_wraps():
     """Decode far past the window: ring cache must stay consistent."""
     cfg = configs.get_reduced("mixtral-8x7b")  # window=16
