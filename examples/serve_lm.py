@@ -3,7 +3,17 @@ clients -> thin-admission batcher -> continuous-batching engine server,
 with latency percentiles. ``--mode lockstep`` runs the batch-at-a-time
 baseline instead.
 
+``--replicas N --routers M`` serves through the replicated fabric
+instead: engine replicas register with a discovery Registry and
+heartbeat load reports; routers dispatch each request to the
+least-loaded replica and fail over when one dies. ``--kill-after N``
+is the failover demo — one replica is killed after N requests have
+been served (deterministically mid-run) and traffic keeps flowing on
+its siblings:
+
     PYTHONPATH=src python examples/serve_lm.py --clients 3 --requests 4
+    PYTHONPATH=src python examples/serve_lm.py --replicas 2 --routers 1 \\
+        --requests 6 --kill-after 4
 """
 
 from repro.launch.serve import main

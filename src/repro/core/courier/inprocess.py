@@ -28,8 +28,13 @@ def shared_pool() -> futures.ThreadPoolExecutor:
     global _pool
     with _pool_lock:
         if _pool is None:
+            # Sized for blocking-handler services (a serve fabric holds one
+            # handler thread per in-flight request): a full pool makes a
+            # dispatched call wait behind workers blocked on *other*
+            # services, which starves an idle replica while its siblings
+            # queue. Workers spawn lazily, so the ceiling is cheap.
             _pool = futures.ThreadPoolExecutor(
-                max_workers=64, thread_name_prefix="courier-inproc")
+                max_workers=256, thread_name_prefix="courier-inproc")
         return _pool
 
 

@@ -31,6 +31,12 @@ class WorkerContext:
         self.node_name = node_name
         self.stop_event = stop_event if stop_event is not None else threading.Event()
         self._stop_program_fn = stop_program_fn
+        # The node's own resolved serving endpoint (set by courier-serving
+        # executables before the service object is constructed). This is
+        # how a service can *advertise itself* — e.g. register with a
+        # discovery Registry — without the program author threading the
+        # address through every constructor. None for non-courier nodes.
+        self.endpoint: Optional[str] = None
 
     @property
     def should_stop(self) -> bool:

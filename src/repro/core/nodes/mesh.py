@@ -53,6 +53,7 @@ class _MeshExecutable(Executable):
 
     def run(self, context: WorkerContext) -> None:
         from repro.core import courier
+        context.endpoint = self._address.endpoint
         set_current_context(context)
         mesh = self._build_mesh()
         obj = _construct(self._cls, self._args,

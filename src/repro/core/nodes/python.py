@@ -66,6 +66,9 @@ class _CourierExecutable(Executable):
         self._address = address
 
     def run(self, context: WorkerContext) -> None:
+        # Endpoint goes into the context *before* construction so the
+        # service's __init__ can advertise itself (discovery registration).
+        context.endpoint = self._address.endpoint
         set_current_context(context)
         obj = _construct(self._cls, self._args, self._kwargs)
         endpoint = self._address.endpoint

@@ -1,10 +1,29 @@
 """LM serving as a Launchpad program — continuous batching by default.
 
+Single-engine topology (``--replicas 1 --routers 0``, the PR-4 path):
+
     frontend clients (CourierNode × N)
       -> batcher (CourierNode: thin admission queue, per-request replies)
       -> model server (MeshWorkerNode: ServeEngine over a slotted KV cache)
 
-Two serving modes share the topology (``--mode``):
+Replicated serve fabric (``--replicas N --routers M``, M >= 1):
+
+    frontend clients (CourierNode × N)
+      -> routers (CourierNode × M: least-loaded dispatch, failover)
+      -> engine servers (MeshWorkerNode × N: one ServeEngine each)
+           ⇅ heartbeats (endpoint + load report)
+    registry (CourierNode: membership, TTL eviction)
+
+In the fabric, every engine replica registers its endpoint with the
+``Registry`` and heartbeats a load report (free KV slots, queue depth,
+EWMA us/token); each ``Router`` discovers the live set, dispatches every
+request to the least-loaded replica, retries onto a sibling when a
+replica dies mid-decode, and fails fast with the typed ``Overloaded``
+when every replica is at its admission budget. All of it is plain
+Launchpad nodes — thread, process, and test launchers wire it the same
+way (see ``repro/serve/router.py``).
+
+Two serving modes share the single-engine topology (``--mode``):
 
 ``continuous`` (default)
     The model server runs a :class:`repro.serve.engine.ServeEngine`: a
@@ -24,6 +43,7 @@ Two serving modes share the topology (``--mode``):
 
     PYTHONPATH=src python -m repro.launch.serve --requests 12
     PYTHONPATH=src python -m repro.launch.serve --mode lockstep
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 --routers 1
 """
 
 from __future__ import annotations
@@ -40,6 +60,7 @@ import numpy as np
 from repro import configs, core as lp
 from repro.models.config import ModelConfig
 from repro.serve import decode as serve_lib
+from repro.serve.router import Router, is_overloaded
 
 # Bounded, thread-safe history for Batcher.stats(): the worker thread
 # appends per-batch sizes while stats() RPCs read concurrently.
@@ -80,11 +101,22 @@ class EngineServer:
     retires — the courier server's handler pool is what lets many
     requests ride the engine concurrently, each reply streaming back
     per-request instead of per-batch.
+
+    With ``registry`` set (the serve fabric), the server registers its
+    own endpoint — learned from the worker context, no plumbing through
+    the program — and heartbeats its live load report (``load()``:
+    free slots, queue depth, EWMA us/token), which is the routers'
+    routing signal. ``kill()`` crashes the replica in place (stops the
+    engine *and* the heartbeats without deregistering): in-flight
+    requests fail over, the registry evicts on missed beats — the
+    failure path tests and the chaos demo drive exactly this.
     """
 
     def __init__(self, model_cfg: ModelConfig, max_new: int = 8,
                  num_slots: int = 8, context_len: int | None = None,
                  eos_id: int | None = None, request_timeout_s: float = 120.0,
+                 registry=None, heartbeat_s: float = 0.5,
+                 name: str | None = None, endpoint: str | None = None,
                  mesh=None):
         import jax
         from repro.models import transformer
@@ -97,9 +129,22 @@ class EngineServer:
             context_len=context_len or 128,
             max_new=max_new, eos_id=eos_id)
         self._engine.start()
+        self._heartbeater = None
+        if registry is not None:
+            ctx = lp.get_current_context()
+            name = name or ctx.node_name
+            endpoint = endpoint or ctx.endpoint
+            if endpoint is None:
+                raise ValueError(
+                    "EngineServer(registry=...) needs a serving endpoint: "
+                    "run it as a courier-serving node or pass endpoint=")
+            self._heartbeater = lp.Heartbeater(
+                registry, name, endpoint, load_fn=self.load,
+                period_s=heartbeat_s, stop_event=ctx.stop_event).start()
 
-    def generate(self, prompt):
-        fut = self._engine.submit(np.asarray(prompt, np.int32).reshape(-1))
+    def generate(self, prompt, max_new=None):
+        fut = self._engine.submit(np.asarray(prompt, np.int32).reshape(-1),
+                                  max_new=max_new)
         from concurrent import futures as cf
         try:
             return fut.result(timeout=self._timeout)
@@ -108,6 +153,22 @@ class EngineServer:
             # let an abandoned reply go on to occupy a slot.
             fut.cancel()
             raise
+
+    def load(self):
+        """The routing signal: free slots, queued requests, EWMA us/token."""
+        return self._engine.load()
+
+    def health(self):
+        return {"status": "ok", **self._engine.load()}
+
+    def kill(self):
+        """Simulate a replica crash: stop heartbeats (no deregistration)
+        and the engine, failing everything in flight. The fabric's job is
+        to make this invisible to clients."""
+        if self._heartbeater is not None:
+            self._heartbeater.stop(deregister=False)
+        self._engine.stop()
+        return "killed"
 
     def stats(self):
         return self._engine.stats()
@@ -227,7 +288,7 @@ class Client:
     """
 
     def __init__(self, batcher, meter, num_requests: int, prompt_len: int,
-                 vocab: int, seed: int, window: int = 4):
+                 vocab: int, seed: int, window: int = 4, source: str = ""):
         self._batcher = batcher
         self._meter = meter
         self._n = num_requests
@@ -235,14 +296,27 @@ class Client:
         self._plen = prompt_len
         self._vocab = vocab
         self._window = max(1, window)
+        # Which admission front this client talks to (router/batcher node
+        # label) — the meter namespaces its percentiles by it.
+        self._source = source
 
     def run(self):
-        pending: list[tuple[float, object]] = []
+        pending: list[tuple[float, np.ndarray, object]] = []
         records: list[tuple[float, int]] = []
 
         def drain_one():
-            t0, fut = pending.pop(0)
-            out = fut.result(timeout=120)
+            t0, prompt, fut = pending.pop(0)
+            while True:
+                try:
+                    out = fut.result(timeout=120)
+                    break
+                except BaseException as exc:  # noqa: BLE001
+                    # Overloaded is the fabric's retry-later signal;
+                    # latency keeps accruing from the first attempt.
+                    if not is_overloaded(exc):
+                        raise
+                    time.sleep(0.01)
+                    fut = self._batcher.futures.submit(prompt)
             records.append((time.monotonic() - t0, len(out)))
 
         for _ in range(self._n):
@@ -250,34 +324,54 @@ class Client:
                 drain_one()
             prompt = self._rng.integers(0, self._vocab, self._plen,
                                         dtype=np.int32)
-            pending.append((time.monotonic(),
+            pending.append((time.monotonic(), prompt,
                             self._batcher.futures.submit(prompt)))
         while pending:
             drain_one()
         self._meter.batch_call(
-            [("record", (lat, out_len), {}) for lat, out_len in records])
+            [("record", (lat, out_len), {"source": self._source})
+             for lat, out_len in records])
 
 
 class Meter:
     """Collects request latencies; prints percentiles and (optionally)
-    writes the summary to a JSON file before stopping the program."""
+    writes the summary to a JSON file before stopping the program.
+
+    Records are tagged with a ``source`` label (the router or batcher
+    node the client went through). One meter serves the whole program and
+    writes ONE file: the top-level keys are the merged roll-up row across
+    every source, with the per-source percentile summaries namespaced
+    under ``per_source`` — N routers writing per-replica summaries to the
+    same ``--meter-json`` path previously meant last-writer-wins.
+    """
 
     def __init__(self, expected: int, summary_path: str | None = None):
         self._expected = expected
         self._summary_path = summary_path
-        self._lat = []
+        self._lat: dict[str, list[float]] = {}
+        self._count = 0
         self._lock = threading.Lock()
 
-    def record(self, latency_s: float, out_len: int):
+    @staticmethod
+    def _percentiles(lat: np.ndarray) -> dict:
+        return {"count": int(lat.size),
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p95_ms": float(np.percentile(lat, 95) * 1e3),
+                "mean_ms": float(lat.mean() * 1e3)}
+
+    def record(self, latency_s: float, out_len: int, source: str = ""):
         with self._lock:
-            self._lat.append(latency_s)
-            done = len(self._lat) >= self._expected
+            self._lat.setdefault(source or "default", []).append(latency_s)
+            self._count += 1
+            done = self._count >= self._expected
         if done:
-            lat = np.array(self._lat)
-            summary = {"count": int(lat.size),
-                       "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                       "p95_ms": float(np.percentile(lat, 95) * 1e3),
-                       "mean_ms": float(lat.mean() * 1e3)}
+            merged = np.concatenate(
+                [np.array(v) for v in self._lat.values()])
+            summary = self._percentiles(merged)   # the merged roll-up row
+            if len(self._lat) > 1 or "default" not in self._lat:
+                summary["per_source"] = {
+                    src: self._percentiles(np.array(v))
+                    for src, v in sorted(self._lat.items())}
             print(f"served {summary['count']} requests: "
                   f"p50={summary['p50_ms']:.1f}ms "
                   f"p95={summary['p95_ms']:.1f}ms")
@@ -291,26 +385,119 @@ class Meter:
 def build_program(model_cfg: ModelConfig, *, num_clients=3,
                   requests_per_client=4, prompt_len=8, max_new=8,
                   mode: str = "continuous", num_slots: int = 8,
-                  meter_json: str | None = None) -> lp.Program:
+                  meter_json: str | None = None, replicas: int = 1,
+                  routers: int = 0, registry_ttl_s: float = 2.0,
+                  heartbeat_s: float = 0.25,
+                  kill_after: int | None = None) -> lp.Program:
+    """Wire the serving topology as a Launchpad program.
+
+    ``routers == 0`` (default) is the direct PR-4 path — one engine (or
+    the lockstep baseline) behind a Batcher; ``replicas`` must be 1.
+    ``routers >= 1`` builds the replicated serve fabric:
+    Registry -> Routers -> EngineServers, clients partitioned across
+    routers round-robin. ``kill_after`` adds a Chaos node that kills
+    replica 0 once that many requests have been served — mid-run by
+    construction (the failover demo: traffic must keep flowing).
+    """
     p = lp.Program(f"serve-{model_cfg.name}")
+    total = num_clients * requests_per_client
+
+    if routers < 1:
+        if replicas != 1:
+            raise ValueError("replicas > 1 needs at least one router "
+                             "(--routers 1)")
+        if kill_after is not None:
+            raise ValueError("the failover demo needs the fabric "
+                             "(--routers >= 1 and --replicas >= 2)")
+        with p.group("server"):
+            if mode == "continuous":
+                server = p.add_node(lp.MeshWorkerNode(
+                    EngineServer, model_cfg, max_new=max_new,
+                    num_slots=num_slots, context_len=prompt_len + max_new))
+            else:
+                server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
+                                                      max_new=max_new))
+        with p.group("batcher"):
+            batcher = p.add_node(lp.CourierNode(Batcher, server, mode=mode))
+        meter = p.add_node(lp.CourierNode(Meter, total,
+                                          summary_path=meter_json))
+        with p.group("client"):
+            for i in range(num_clients):
+                p.add_node(lp.CourierNode(
+                    Client, batcher, meter, requests_per_client, prompt_len,
+                    model_cfg.vocab_size, seed=i))
+        return p
+
+    if mode != "continuous":
+        raise ValueError("the serve fabric routes to continuous-batching "
+                         "engines only (drop --mode lockstep)")
+    if kill_after is not None and replicas < 2:
+        raise ValueError("killing a replica with no sibling loses requests "
+                         "by construction; use --replicas >= 2")
+    if kill_after is not None and kill_after >= total:
+        raise ValueError(f"--kill-after {kill_after} never fires: only "
+                         f"{total} requests will be served")
+
+    with p.group("registry"):
+        registry = p.add_node(lp.CourierNode(lp.Registry,
+                                             ttl_s=registry_ttl_s))
+    replica_handles = []
     with p.group("server"):
-        if mode == "continuous":
-            server = p.add_node(lp.MeshWorkerNode(
+        for _ in range(replicas):
+            replica_handles.append(p.add_node(lp.MeshWorkerNode(
                 EngineServer, model_cfg, max_new=max_new,
-                num_slots=num_slots, context_len=prompt_len + max_new))
-        else:
-            server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
-                                                  max_new=max_new))
-    with p.group("batcher"):
-        batcher = p.add_node(lp.CourierNode(Batcher, server, mode=mode))
-    meter = p.add_node(lp.CourierNode(
-        Meter, num_clients * requests_per_client, summary_path=meter_json))
+                num_slots=num_slots, context_len=prompt_len + max_new,
+                registry=registry, heartbeat_s=heartbeat_s)))
+    router_nodes, router_handles = [], []
+    with p.group("router"):
+        for _ in range(routers):
+            node = lp.CourierNode(Router, registry,
+                                  refresh_s=heartbeat_s)
+            router_handles.append(p.add_node(node))
+            router_nodes.append(node)
+    meter = p.add_node(lp.CourierNode(Meter, total, summary_path=meter_json))
     with p.group("client"):
         for i in range(num_clients):
+            m = i % routers
             p.add_node(lp.CourierNode(
-                Client, batcher, meter, requests_per_client, prompt_len,
-                model_cfg.vocab_size, seed=i))
+                Client, router_handles[m], meter, requests_per_client,
+                prompt_len, model_cfg.vocab_size, seed=i,
+                source=router_nodes[m].name))
+    if kill_after is not None:
+        with p.group("chaos"):
+            p.add_node(lp.PyNode(Chaos, replica_handles[0],
+                                 list(router_handles), kill_after))
     return p
+
+
+class Chaos:
+    """Failover demo: crash one replica in place once the router has
+    completed ``after_served`` requests — count-based, not timer-based,
+    so the kill lands mid-run on any host speed (a timer either misses a
+    fast warm run or fires before a cold one got going). The router's
+    ``completed`` counter is the live progress signal: clients flush
+    their meter records in one batch at the end, so the meter cannot
+    drive this. The fabric's promise is that nobody notices the kill —
+    the meter still reaches its expected count because in-flight
+    requests fail over to the sibling(s)."""
+
+    def __init__(self, replica, routers, after_served: int):
+        self._replica = replica
+        self._routers = routers          # every router: completions are
+        self._after = after_served       # counted per admission front
+
+    def run(self):
+        ctx = lp.get_current_context()
+        while not ctx.wait_for_stop(0.05):
+            done = sum(r.stats()["completed"] for r in self._routers)
+            if done < self._after:
+                continue
+            try:
+                self._replica.kill()
+                print("chaos: killed one engine replica; traffic continues")
+            except BaseException as exc:  # noqa: BLE001 - already dead
+                print(f"chaos: kill failed ({exc!r})")
+            return
 
 
 def main(argv=None):
@@ -325,13 +512,22 @@ def main(argv=None):
                     help="KV-cache slots (continuous mode)")
     ap.add_argument("--meter-json", default=None,
                     help="write the latency percentile summary here")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas (>1 needs --routers >= 1)")
+    ap.add_argument("--routers", type=int, default=0,
+                    help="fabric routers; 0 = direct single-engine path")
+    ap.add_argument("--kill-after", type=int, default=None, metavar="N",
+                    help="failover demo: kill replica 0 after N requests "
+                         "have been served (deterministically mid-run)")
     args = ap.parse_args(argv)
     cfg = (configs.get_reduced(args.arch) if args.arch
            else configs.get_reduced("qwen2-1.5b"))
     program = build_program(cfg, num_clients=args.clients,
                             requests_per_client=args.requests,
                             mode=args.mode, num_slots=args.slots,
-                            meter_json=args.meter_json)
+                            meter_json=args.meter_json,
+                            replicas=args.replicas, routers=args.routers,
+                            kill_after=args.kill_after)
     print(program)
     lp.launch_and_wait(program, timeout_s=600)
 

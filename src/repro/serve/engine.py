@@ -127,6 +127,9 @@ class ServeEngine:
         self._counters = dict(submitted=0, admitted=0, retired=0, failed=0,
                               steps=0, decode_tokens=0, generated_tokens=0,
                               occupancy_sum=0, peak_occupancy=0)
+        # EWMA decode-step microseconds per token: the routing signal a
+        # load balancer uses to weigh this engine against its siblings.
+        self._ewma_us_tok = 0.0
 
     # -- client side ---------------------------------------------------------
     def submit(self, prompt, max_new: Optional[int] = None) -> cf.Future:
@@ -214,16 +217,20 @@ class ServeEngine:
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return 0
+        t0 = time.perf_counter()
         nxt, self._state = self._decode(
             self._params, self._state, jnp.asarray(self._tokens),
             jnp.asarray(self._t), self._split_key())
-        nxt = np.asarray(nxt)
+        nxt = np.asarray(nxt)                       # host sync ends the step
+        us_tok = (time.perf_counter() - t0) * 1e6 / len(active)
         with self._lock:
             c = self._counters
             c["steps"] += 1
             c["decode_tokens"] += len(active)
             c["occupancy_sum"] += len(active)
             c["peak_occupancy"] = max(c["peak_occupancy"], len(active))
+            self._ewma_us_tok = us_tok if self._ewma_us_tok == 0.0 \
+                else 0.2 * us_tok + 0.8 * self._ewma_us_tok
         for i in active:
             slot = self._slots[i]
             tok = int(nxt[i, 0])
@@ -312,9 +319,21 @@ class ServeEngine:
         """Counters + derived occupancy; safe from any thread."""
         with self._lock:
             s = dict(self._counters)
+            s["ewma_us_per_token"] = self._ewma_us_tok
         s["num_slots"] = self._ns
         s["free_slots"] = len(self._free)
         s["queue_depth"] = self._queue.qsize()
         s["mean_occupancy"] = (s["occupancy_sum"] / s["steps"]
                                if s["steps"] else 0.0)
         return s
+
+    def load(self) -> dict:
+        """Cheap load report (the routing signal a fabric router uses):
+        free KV slots, queued requests, and EWMA decode us/token. Safe
+        from any thread, no full counter copy."""
+        with self._lock:
+            ewma = self._ewma_us_tok
+            free = len(self._free)
+        return {"num_slots": self._ns, "free_slots": free,
+                "queue_depth": self._queue.qsize(),
+                "ewma_us_per_token": ewma}

@@ -1,0 +1,427 @@
+"""Serve-fabric router: least-loaded dispatch across engine replicas.
+
+The control plane over the PR 1-3 data plane: replicas register with a
+:class:`repro.core.discovery.Registry` and heartbeat a load report (free
+KV slots, queue depth, EWMA us/token); a :class:`Router` admits requests
+and forwards each one to the least-loaded healthy replica over the
+existing courier ``futures`` pipeline. The program graph stays static —
+``clients -> router -> registry`` handles — while the *membership* under
+the router moves at runtime:
+
+  * **Discovery**: a background thread polls ``registry.lookup()`` every
+    ``refresh_s``; new replicas get a courier client, evicted ones are
+    dropped (their in-flight requests fail over first). Every poll also
+    refreshes the load reports — membership generation alone can't
+    short-circuit it, because heartbeats update loads without bumping
+    the generation.
+  * **Routing**: per-request score = local in-flight count (this
+    router's own dispatches, exact) + the replica's last-reported queue
+    depth − its reported free slots; the freshest signal (our own
+    in-flight deltas) dominates between heartbeats, ties break
+    round-robin. Requests never pin to a replica: two requests from one
+    client may land on two engines.
+  * **Failover**: a dispatch that dies with a *replica* error (transport
+    failure, stopped engine) is retried on a sibling — bounded by
+    ``max_retries`` — and the failed replica is evicted from the
+    registry (``report_failure``) so other routers stop picking it too.
+    A *request* error (bad prompt: ``ValueError``/``TypeError``) is
+    returned to the caller unretried: resending a poisoned request N
+    times is how fabrics melt down. When the failover leaves no healthy
+    replica at all, the caller gets ``Overloaded`` (retry-later) rather
+    than the dead replica's error — a stalled-but-live replica
+    re-registers on its next heartbeat, so the condition is transient by
+    construction.
+  * **Backpressure**: when every healthy replica is at its admission
+    budget (in-flight ≥ ``2 * num_slots``: a full pool plus an equally
+    deep queue), ``submit`` fails fast with the typed
+    :class:`Overloaded` instead of queueing unboundedly. Callers treat
+    it as a retry-later signal (see :func:`is_overloaded`, which unwraps
+    the courier ``RemoteError`` envelope).
+
+The router is an ordinary ``CourierNode`` service: ``submit`` blocks its
+RPC handler thread for one reply, so the courier server's handler pool is
+the router's concurrency. Several routers can front the same registry;
+each keeps its own in-flight counters (the heartbeat load reports carry
+the cross-router signal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent import futures as cf
+from typing import Any, Callable, Optional
+
+from repro.core import courier
+from repro.core.courier.serialization import RemoteError
+from repro.core.nodes.base import get_current_context
+
+
+class Overloaded(RuntimeError):
+    """Every healthy replica is at its admission budget. Typed so callers
+    can tell "back off and retry" from a real failure."""
+
+
+def unwrap_remote(exc: BaseException) -> BaseException:
+    """Peel courier ``RemoteError`` envelopes down to the service's own
+    exception (cross-transport: inproc raises originals, gRPC/shm wrap)."""
+    seen: set[int] = set()
+    while (isinstance(exc, RemoteError) and exc.__cause__ is not None
+           and id(exc) not in seen):
+        seen.add(id(exc))
+        exc = exc.__cause__
+    return exc
+
+
+def is_overloaded(exc: BaseException) -> bool:
+    return isinstance(unwrap_remote(exc), Overloaded)
+
+
+def _is_request_error(exc: BaseException) -> bool:
+    """Errors the *request* caused — retrying them on a sibling would just
+    fail N times (and poison N engines' admission paths)."""
+    return isinstance(unwrap_remote(exc), (ValueError, TypeError))
+
+
+def _is_timeout(exc: BaseException) -> bool:
+    """Timeouts — local or raised server-side and shipped back wrapped —
+    mean slow, not dead: never grounds for evicting the replica."""
+    return isinstance(unwrap_remote(exc), (TimeoutError, cf.TimeoutError))
+
+
+@dataclasses.dataclass
+class _Replica:
+    name: str
+    endpoint: str
+    client: Any
+    load: dict
+    inflight: int = 0
+    dispatched: int = 0
+    # Removed from the routing table while requests are still in flight
+    # (TTL eviction of a maybe-just-stalled replica): no new dispatches,
+    # but the transport stays open until the last one resolves.
+    draining: bool = False
+
+    def budget(self, queue_slack: Optional[int]) -> int:
+        slots = int(self.load.get("num_slots", 8)) or 8
+        slack = slots if queue_slack is None else queue_slack
+        return slots + slack
+
+    def score(self) -> float:
+        # Local in-flight is exact and fresh; the reported queue/free pair
+        # is at most one heartbeat old and carries other routers' traffic.
+        return (self.inflight
+                + float(self.load.get("queue_depth", 0))
+                - float(self.load.get("free_slots", 0)))
+
+
+class Router:
+    """Admission front for a replicated serve fabric.
+
+    ``registry`` is a handle/client for (or direct reference to) a
+    :class:`~repro.core.discovery.Registry`. ``client_factory`` builds a
+    courier client from an endpoint (defaults to
+    :func:`repro.core.courier.client_for`; tests inject fakes).
+    """
+
+    def __init__(self, registry: Any, *, refresh_s: float = 0.25,
+                 max_retries: int = 2, queue_slack: Optional[int] = None,
+                 startup_wait_s: float = 15.0,
+                 request_timeout_s: float = 120.0,
+                 client_factory: Optional[Callable[[str], Any]] = None):
+        self._registry = registry
+        self._refresh_s = refresh_s
+        self._max_retries = max_retries
+        self._queue_slack = queue_slack
+        self._startup_wait = startup_wait_s
+        self._timeout = request_timeout_s
+        self._client_factory = client_factory or courier.client_for
+
+        self._lock = threading.Lock()
+        self._replicas: dict[str, _Replica] = {}
+        self._draining: list[_Replica] = []
+        self._generation = -1
+        self._closed = threading.Event()
+        self._ctx_stop = get_current_context().stop_event
+        self._counters = dict(submitted=0, completed=0, retries=0,
+                              failovers=0, overloaded=0, request_errors=0,
+                              refreshes=0, dispatches=0, dispatch_us_sum=0.0)
+        self._first_failover_done_s: Optional[float] = None
+
+        self._refresh()                            # best-effort initial view
+        self._thread = threading.Thread(target=self._refresh_loop,
+                                        daemon=True, name="router-refresh")
+        self._thread.start()
+
+    # -- membership ----------------------------------------------------------
+    def _refresh_loop(self) -> None:
+        while not (self._closed.is_set() or self._ctx_stop.is_set()):
+            self._closed.wait(self._refresh_s)
+            if self._closed.is_set() or self._ctx_stop.is_set():
+                return
+            self._refresh()
+
+    def _refresh(self) -> None:
+        try:
+            view = self._registry.lookup()
+        except Exception:  # noqa: BLE001 - registry down: keep last view
+            return
+        live = {r["name"]: r for r in view["replicas"]}
+        to_close, missing = [], []
+        with self._lock:
+            self._counters["refreshes"] += 1
+            self._generation = view["generation"]
+            for name in list(self._replicas):
+                if name not in live:
+                    rep = self._replicas.pop(name)
+                    if rep.inflight > 0:
+                        # TTL eviction may just mean stalled: closing the
+                        # transport now would abort the in-flight requests
+                        # of a replica that is still serving them. Stop
+                        # dispatching; the last release closes it.
+                        rep.draining = True
+                        self._draining.append(rep)
+                    else:
+                        to_close.append(rep)
+            for name, info in live.items():
+                rep = self._replicas.get(name)
+                if rep is None:
+                    missing.append(info)
+                else:
+                    rep.load = dict(info["load"])
+        # Client construction does connect I/O (shm rendezvous probe, gRPC
+        # channel) — never under the dispatch lock.
+        built = []
+        for info in missing:
+            try:
+                built.append(_Replica(
+                    name=info["name"], endpoint=info["endpoint"],
+                    client=self._client_factory(info["endpoint"]),
+                    load=dict(info["load"])))
+            except Exception:  # noqa: BLE001 - endpoint unreachable
+                continue
+        with self._lock:
+            for rep in built:
+                if rep.name in self._replicas:   # lost a refresh race
+                    to_close.append(rep)
+                else:
+                    self._replicas[rep.name] = rep
+        for rep in to_close:
+            self._close_client(rep)
+
+    @staticmethod
+    def _close_client(rep: _Replica) -> None:
+        close = getattr(rep.client, "close", None)
+        if callable(close):
+            try:
+                close()
+            except Exception:  # noqa: BLE001 - already-dead transport
+                pass
+
+    def _drop_replica(self, rep: _Replica) -> None:
+        """A dispatch observed ``rep`` failing: drop it locally and evict
+        it registry-wide so siblings stop picking it too. A live replica
+        re-registers on its next heartbeat.
+
+        Dropped by *identity*, not name: if the failure came from an old
+        (drained) incarnation while a recovered replica already
+        re-registered under the same name, the fresh entry — and its
+        in-flight requests — must survive the stale error."""
+        superseded = False
+        with self._lock:
+            cur = self._replicas.get(rep.name)
+            if cur is rep:
+                self._replicas.pop(rep.name)
+            else:
+                superseded = cur is not None
+            if rep.draining:
+                if rep in self._draining:   # _release may have beaten us
+                    self._draining.remove(rep)
+                rep.draining = False        # this close is the final one
+        self._close_client(rep)
+        if superseded:
+            return
+        try:
+            self._registry.report_failure(rep.name)
+        except Exception:  # noqa: BLE001 - registry down: TTL will evict
+            pass
+
+    # -- dispatch ------------------------------------------------------------
+    def _pick(self, exclude: set[str]) -> Optional[_Replica]:
+        """Least-loaded healthy replica under budget, or None. Raises
+        Overloaded when replicas exist but every one is at budget."""
+        with self._lock:
+            candidates = [r for name, r in self._replicas.items()
+                          if name not in exclude]
+            if not candidates:
+                return None
+            admissible = [r for r in candidates
+                          if r.inflight < r.budget(self._queue_slack)]
+            if not admissible:
+                self._counters["overloaded"] += 1
+                raise Overloaded(
+                    f"all {len(candidates)} replicas at admission budget "
+                    f"(in-flight {[r.inflight for r in candidates]})")
+            # Ties go to the replica dispatched least: equal scores
+            # round-robin instead of pinning to dict order.
+            best = min(admissible, key=lambda r: (r.score(), r.dispatched))
+            best.inflight += 1
+            best.dispatched += 1
+            return best
+
+    def _release(self, rep: _Replica) -> None:
+        with self._lock:
+            rep.inflight -= 1
+            drained = rep.draining and rep.inflight <= 0
+            if drained:
+                if rep in self._draining:   # close() may have beaten us
+                    self._draining.remove(rep)
+                rep.draining = False
+        if drained:
+            self._close_client(rep)
+
+    def submit(self, prompt, max_new: Optional[int] = None):
+        """Serve one request: returns the completed [S + n_generated]
+        sequence, transparently failing over if the serving replica dies
+        mid-decode. Raises :class:`Overloaded` when the fabric is full."""
+        with self._lock:
+            self._counters["submitted"] += 1
+        deadline = time.monotonic() + self._startup_wait
+        tried: set[str] = set()
+        attempts = 0
+        failed_over = False
+        last_exc: Optional[BaseException] = None
+        while attempts <= self._max_retries:
+            # Dispatch accounting starts per attempt: waits (startup
+            # grace, a timed-out prior attempt) are not dispatch cost.
+            t0 = time.perf_counter()
+            rep = self._pick(tried)
+            if rep is None:
+                if tried:
+                    # Every replica left was tried and dropped: the fabric
+                    # has no healthy replica *right now* — a retry-later
+                    # condition (a stalled-but-live replica re-registers
+                    # on its next beat), not this request's failure.
+                    with self._lock:
+                        self._counters["overloaded"] += 1
+                    raise Overloaded(
+                        f"no healthy replica left after {attempts} "
+                        "attempts") from last_exc
+                if time.monotonic() >= deadline:
+                    with self._lock:
+                        self._counters["overloaded"] += 1
+                    raise Overloaded("no live replicas in the registry")
+                # Launch is asynchronous: replicas may still be coming up.
+                self._closed.wait(0.05)
+                self._refresh()
+                continue
+            attempts += 1
+            kwargs = {} if max_new is None else {"max_new": max_new}
+            try:
+                fut = rep.client.futures.generate(prompt, **kwargs)
+            except BaseException as exc:  # noqa: BLE001 - dispatch failed
+                self._release(rep)
+                last_exc = exc
+                tried.add(rep.name)
+                self._drop_replica(rep)
+                failed_over = True
+                with self._lock:
+                    self._counters["retries"] += 1
+                    self._counters["failovers"] += 1
+                continue
+            with self._lock:
+                self._counters["dispatches"] += 1
+                self._counters["dispatch_us_sum"] += \
+                    (time.perf_counter() - t0) * 1e6
+            try:
+                out = fut.result(timeout=self._timeout)
+            except cf.TimeoutError as exc:
+                # Slow is not dead: exclude the replica for this request
+                # but let heartbeat TTL decide whether it leaves the set.
+                fut.cancel()
+                self._release(rep)
+                last_exc = exc
+                tried.add(rep.name)
+                with self._lock:
+                    self._counters["retries"] += 1
+                continue
+            except BaseException as exc:  # noqa: BLE001
+                self._release(rep)
+                if _is_request_error(exc):
+                    with self._lock:
+                        self._counters["request_errors"] += 1
+                    raise
+                last_exc = exc
+                tried.add(rep.name)
+                if _is_timeout(exc):
+                    # A *server-side* timeout arrives wrapped in the
+                    # courier envelope: same policy as the local one
+                    # above — exclude for this request, don't evict.
+                    with self._lock:
+                        self._counters["retries"] += 1
+                    continue
+                self._drop_replica(rep)
+                failed_over = True
+                with self._lock:
+                    self._counters["retries"] += 1
+                    self._counters["failovers"] += 1
+                continue
+            self._release(rep)
+            with self._lock:
+                self._counters["completed"] += 1
+                if failed_over and self._first_failover_done_s is None:
+                    # When the first request that had to fail over lands:
+                    # the fabric's observable recovery point after a kill.
+                    self._first_failover_done_s = time.perf_counter()
+            return out
+        assert last_exc is not None
+        raise last_exc
+
+    # -- introspection -------------------------------------------------------
+    def health(self) -> dict:
+        with self._lock:
+            return {"status": "ok", "replicas": len(self._replicas),
+                    "generation": self._generation}
+
+    def load(self) -> dict:
+        with self._lock:
+            return {"replicas": len(self._replicas),
+                    "inflight": sum(r.inflight
+                                    for r in self._replicas.values())}
+
+    def stats(self) -> dict:
+        with self._lock:
+            s = dict(self._counters)
+            s["generation"] = self._generation
+            s["first_failover_done_s"] = self._first_failover_done_s
+            s["replicas"] = {name: {"endpoint": r.endpoint,
+                                    "inflight": r.inflight,
+                                    "dispatched": r.dispatched,
+                                    "load": dict(r.load)}
+                             for name, r in self._replicas.items()}
+        # Per dispatch *attempt* — the sum accrues once per dispatch, so a
+        # request that failed over contributes each of its attempts.
+        s["mean_dispatch_us"] = s.pop("dispatch_us_sum") / (s["dispatches"]
+                                                            or 1)
+        return s
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        self._closed.set()
+        if self._thread.is_alive():
+            self._thread.join(timeout=5)
+        with self._lock:
+            reps = list(self._replicas.values()) + self._draining
+            for rep in reps:
+                rep.draining = False    # a late _release must not re-close
+            self._replicas.clear()
+            self._draining.clear()
+        for rep in reps:
+            self._close_client(rep)
+
+    def __enter__(self) -> "Router":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
