@@ -49,6 +49,35 @@ def run(emit):
          _t(lambda: ops.decode_attention(qd, kd, vd, valid, interpret=True)),
          f"tpu_hbm_bytes={2 * 2 * kd.size}")
 
+    # Paired decode arms at a serving-like shape: the dense mirror of the
+    # engine's decode-attention inner loop (materialized [B,H,L] scores)
+    # vs the ops dispatcher exactly as models/attention.py calls it
+    # (Pallas on TPU, jit'd oracle elsewhere — real executables both, so
+    # the pair is comparable on any backend, unlike the interpret row).
+    Bd, Ld = 8, 2048
+    qd = jax.random.normal(ks[0], (Bd, H, dh), jnp.bfloat16)
+    kd = jax.random.normal(ks[1], (Bd, Ld, KV, dh), jnp.bfloat16)
+    vd = jax.random.normal(ks[2], (Bd, Ld, KV, dh), jnp.bfloat16)
+    valid = (jnp.arange(Ld)[None, :]
+             < jnp.linspace(Ld // 2, Ld, Bd, dtype=jnp.int32)[:, None])
+
+    @jax.jit
+    def _dense(q, k, v, m):
+        g = H // KV
+        kh = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+        vh = jnp.repeat(v, g, axis=2)
+        s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32), kh)
+        s = s * (dh ** -0.5) + jnp.where(m[:, None], 0.0, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhl,blhd->bhd", w, vh.astype(jnp.float32))
+
+    emit("kernel/decode_attention/dense",
+         _t(lambda: _dense(qd, kd, vd, valid), n=10),
+         f"B={Bd} L={Ld} scores_bytes={4 * Bd * H * Ld}")
+    emit("kernel/decode_attention/flash",
+         _t(lambda: ops.decode_attention(qd, kd, vd, valid), n=10),
+         f"B={Bd} L={Ld} tpu_hbm_bytes={2 * 2 * kd.size}")
+
     W = 256
     a = jax.random.uniform(ks[0], (B, S, W), jnp.float32, 0.9, 0.999)
     x = jax.random.normal(ks[1], (B, S, W), jnp.float32)

@@ -3,11 +3,18 @@
 ``interpret`` defaults to auto: real kernels on TPU, interpret-mode
 execution elsewhere (this container is CPU-only — interpret mode runs the
 kernel body in Python for correctness validation; see DESIGN.md §7).
+
+``decode_attention`` is the one wrapper on a serving hot path (the engine
+calls it every token), so it carries a backend-aware dispatch table
+instead of a bare jit: the Pallas kernel on TPU, the pure-jnp oracle as a
+real XLA executable everywhere else, with ``REPRO_FORCE_REF=1`` as the
+production escape hatch. See README.md in this directory.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -15,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssm_scan as _ssm
 
@@ -35,12 +43,63 @@ def flash_attention(q, k, v, causal: bool = True,
                                interpret=interpret)
 
 
+def _pick_block_l(L: int, want: int) -> int:
+    """Largest divisor of L that is <= want (the kernel tiles L evenly)."""
+    b = min(want, L)
+    while L % b:
+        b -= 1
+    return b
+
+
+def resolve_decode_impl(impl: Optional[str] = None,
+                        interpret: Optional[bool] = None) -> str:
+    """Dispatch rule for ``decode_attention``.
+
+    Explicit ``impl`` wins (tests pin a path). Otherwise ``REPRO_FORCE_REF=1``
+    forces the oracle (the escape hatch when a kernel miscompile is
+    suspected in production), an explicit ``interpret`` flag selects the
+    Pallas body (that flag only means something to the kernel), and the
+    default is backend-driven: the real kernel on TPU, the jnp oracle —
+    a fast native XLA executable, not Python interpret mode — elsewhere.
+
+    NOTE: when called inside a traced function the choice is baked into
+    that executable at trace time (env var and backend are host state);
+    the serve engine keys its executable caches on the impl for this
+    reason.
+    """
+    if impl is not None:
+        if impl not in ("pallas", "ref"):
+            raise ValueError(f"impl must be 'pallas' or 'ref', got {impl!r}")
+        return impl
+    if os.environ.get("REPRO_FORCE_REF", "") == "1":
+        return "ref"
+    if interpret is not None:
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
 @functools.partial(jax.jit, static_argnames=("block_l", "interpret"))
-def decode_attention(q, k, v, valid, block_l: int = 512,
-                     interpret: Optional[bool] = None):
-    interpret = _auto_interpret() if interpret is None else interpret
+def _decode_pallas(q, k, v, valid, block_l: int, interpret: bool):
     return _dec.decode_attention(q, k, v, valid, block_l=block_l,
                                  interpret=interpret)
+
+
+_decode_ref = jax.jit(_ref.decode_attention)
+
+
+def decode_attention(q, k, v, valid, block_l: int = 512,
+                     interpret: Optional[bool] = None,
+                     impl: Optional[str] = None):
+    """Backend-dispatched single-token attention (see resolve_decode_impl).
+
+    q [B,H,dh]; k/v [B,L,KV,dh]; valid [B,L] bool -> [B,H,dh]. Both paths
+    share one contract, including all-invalid rows -> zeros.
+    """
+    if resolve_decode_impl(impl, interpret) == "ref":
+        return _decode_ref(q, k, v, valid)
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _decode_pallas(q, k, v, valid,
+                          _pick_block_l(k.shape[1], block_l), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "block_w",

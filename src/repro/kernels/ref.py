@@ -48,6 +48,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """One-token attention against a cache.
 
     q [B,H,dh]; k/v [B,L,KV,dh]; valid [B,L] bool -> [B,H,dh].
+
+    A row with no valid slot outputs zeros — the kernel's convention (its
+    online-softmax accumulator never runs, so l=0 finalizes to 0), not the
+    uniform-softmax mean a plain softmax over all-NEG_INF would give.
     """
     B, H, dh = q.shape
     KV = k.shape[2]
@@ -59,6 +63,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                         k.astype(jnp.float32)) * sm_scale
     logits = jnp.where(valid[:, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(valid.any(axis=-1)[:, None, None], w, 0.0)
     out = jnp.einsum("bhl,blhd->bhd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
 

@@ -117,7 +117,9 @@ class EngineServer:
                  eos_id: int | None = None, request_timeout_s: float = 120.0,
                  registry=None, heartbeat_s: float = 0.5,
                  name: str | None = None, endpoint: str | None = None,
-                 mesh=None):
+                 mesh=None, sync_every: int = 8, decode_impl: str = "auto",
+                 top_k: int | None = None,
+                 prefill_chunk: int | None = None):
         import jax
         from repro.models import transformer
         from repro.serve.engine import ServeEngine
@@ -127,7 +129,9 @@ class EngineServer:
         self._engine = ServeEngine(
             model_cfg, params, num_slots=num_slots,
             context_len=context_len or 128,
-            max_new=max_new, eos_id=eos_id)
+            max_new=max_new, eos_id=eos_id, sync_every=sync_every,
+            decode_impl=decode_impl, top_k=top_k,
+            prefill_chunk=prefill_chunk)
         self._engine.start()
         self._heartbeater = None
         if registry is not None:
@@ -479,7 +483,10 @@ class Chaos:
     their meter records in one batch at the end, so the meter cannot
     drive this. The fabric's promise is that nobody notices the kill —
     the meter still reaches its expected count because in-flight
-    requests fail over to the sibling(s)."""
+    requests fail over to the sibling(s). The poll must be much finer
+    than the gap between the first and last completion: once the jit
+    executables are warm, fused decode windows drain a whole small
+    demo's worth of requests in tens of milliseconds."""
 
     def __init__(self, replica, routers, after_served: int):
         self._replica = replica
@@ -488,7 +495,7 @@ class Chaos:
 
     def run(self):
         ctx = lp.get_current_context()
-        while not ctx.wait_for_stop(0.05):
+        while not ctx.wait_for_stop(0.002):
             done = sum(r.stats()["completed"] for r in self._routers)
             if done < self._after:
                 continue

@@ -298,8 +298,15 @@ def _sdpa_grouped(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
     return out.reshape(B, Sq, H, dh)
 
 
+def _flash_decode_eligible(cfg: ModelConfig) -> bool:
+    """The flash-decode kernel has no softcap and reduces over the whole
+    cache length per core, so it needs an unsharded (tp=1) cache."""
+    return not cfg.logit_softcap and _tp_size() == 1
+
+
 def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
-                     t: jax.Array, kind: str) -> tuple[jax.Array, dict]:
+                     t: jax.Array, kind: str,
+                     impl: str = "auto") -> tuple[jax.Array, dict]:
     """x [B,1,D]; ``t`` is the absolute position of the new token — a
     scalar (all rows in lockstep) or a ``[B]`` vector (continuous batching:
     each cache row advances independently, so slots holding sequences of
@@ -310,6 +317,15 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     ring-position arithmetic, which is what makes ragged admission (and
     right-padded prefill leftovers in those slots) correct rather than
     attended-to garbage. Returns (attn output [B,1,D], updated cache).
+
+    ``impl`` selects the attention leaf: "dense" is the grouped-einsum XLA
+    path; "flash" hands q + the ring ``valid`` mask to the one-HBM-pass
+    flash-decode kernel via the ``kernels.ops`` dispatcher (the kernel on
+    TPU, the jnp oracle as a native executable elsewhere — same wiring,
+    swapped leaf); "auto" picks flash exactly when the kernel would be
+    real (TPU) and eligible. Ineligible stacks (softcap, sharded cache)
+    silently fall back to dense. Resolved at trace time — executable
+    caches must key on it.
     """
     B = x.shape[0]
     L = cache["k"].shape[1]
@@ -340,9 +356,79 @@ def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
     valid = k_pos >= 0
     if window is not None:
         valid &= (tb[:, None] - k_pos) < window
-    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
-    bias = bias[:, None, None, :]                              # [B,1,1,L]
 
-    out = _sdpa_grouped(cfg, q, k.astype(q.dtype), v.astype(q.dtype), bias)
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "dense"
+    if impl == "flash" and _flash_decode_eligible(cfg):
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.decode_attention(q[:, 0], k.astype(q.dtype),
+                                          v.astype(q.dtype), valid)
+        out = out[:, None]                                     # [B,1,H,dh]
+    else:
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        bias = bias[:, None, None, :]                          # [B,1,1,L]
+        out = _sdpa_grouped(cfg, q, k.astype(q.dtype), v.astype(q.dtype),
+                            bias)
     out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
     return layers.apply_linear(p["wo"], out), {"k": k, "v": v}
+
+
+def extend_attention(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                     t0: jax.Array, kind: str) -> tuple[jax.Array, dict]:
+    """Chunked-prefill attention: extend a ring cache by ``C`` prompt
+    tokens at positions ``t0 .. t0+C-1`` in one pass.
+
+    x [B,C,D]; ``t0`` is the chunk's first absolute position (scalar or
+    [B]). Returns (attn output [B,C,D], updated cache).
+
+    Queries attend over the *concatenation* of the existing cache slots
+    and the chunk's own keys, with per-query position masks — the chunk
+    is scattered into the ring only afterwards. Writing first would be
+    wrong whenever the ring is full: position ``t0+j`` evicts slot
+    ``(t0+j) mod L``, whose old token is still inside the window of every
+    query earlier in the chunk (its distance is < L <= window+chunk), so
+    a pre-write would attend fresh keys where history should be.
+    Requires C <= L so the chunk's slots are distinct.
+    """
+    B, C = x.shape[:2]
+    L = cache["k"].shape[1]
+    window = cfg.window if kind in ("swa", "local") else None
+    if C > L:
+        raise ValueError(f"prefill chunk ({C}) exceeds the cache ring ({L})")
+
+    tb = jnp.broadcast_to(jnp.asarray(t0, jnp.int32), (B,))
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    pos = tb[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]   # [B,C]
+    if cfg.rope:
+        sin, cos = layers.rope_freqs(cfg, pos)
+        q = layers.apply_rope(q, sin, cos)
+        k_new = layers.apply_rope(k_new, sin, cos)
+
+    # Absolute position of each existing slot *before* this chunk lands:
+    # slot i holds the most recent token congruent to i mod L that is
+    # <= t0-1. At t0=0 every k_pos_old is negative -> fully masked, so the
+    # first chunk extends cleanly from a zeroed state.
+    last = tb[:, None] - 1                                        # [B,1]
+    idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+    k_pos_old = last - jnp.mod(last - idx, L)                     # [B,L]
+    diff_old = pos[:, :, None] - k_pos_old[:, None, :]            # [B,C,L]
+    ok_old = jnp.broadcast_to(k_pos_old[:, None, :] >= 0, diff_old.shape)
+    if window is not None:
+        ok_old &= diff_old < window
+    diff_new = pos[:, :, None] - pos[:, None, :]                  # [B,C,C]
+    ok_new = diff_new >= 0
+    if window is not None:
+        ok_new &= diff_new < window
+    ok = jnp.concatenate([ok_old, ok_new], axis=-1)               # [B,C,L+C]
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+
+    k_all = jnp.concatenate([cache["k"].astype(q.dtype), k_new], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(q.dtype), v_new], axis=1)
+    out = _sdpa(cfg, q, k_all, v_all, bias)
+    out = out.reshape(B, C, cfg.num_heads * cfg.head_dim)
+
+    slots = jnp.mod(pos, L)                                       # [B,C]
+    bidx = jnp.arange(B, dtype=jnp.int32)[:, None]
+    ck = cache["k"].at[bidx, slots].set(k_new.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slots].set(v_new.astype(cache["v"].dtype))
+    return layers.apply_linear(p["wo"], out), {"k": ck, "v": cv}

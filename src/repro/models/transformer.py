@@ -386,10 +386,11 @@ def write_decode_slot(cfg: ModelConfig, state: dict, slot_state: dict,
 
 
 def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
-                  state: dict, t: jax.Array):
+                  state: dict, t: jax.Array, attn_impl: str = "auto"):
     h = layers.apply_norm(cfg, p["norm"], x)
     if kind in (ATTN, SWA, LOCAL):
-        h, state = attention.decode_attention(cfg, p["attn"], h, state, t, kind)
+        h, state = attention.decode_attention(cfg, p["attn"], h, state, t,
+                                              kind, impl=attn_impl)
     elif kind == XATTN:
         # Cross K/V are precomputed once (prefill); just attend.
         q, _, _ = attention._project_qkv(cfg, p["attn"], h, h[:, :1])
@@ -416,12 +417,15 @@ def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: dict, state: dict,
-                tokens: jax.Array, t: jax.Array):
+                tokens: jax.Array, t: jax.Array, attn_impl: str = "auto"):
     """One decode step. tokens [B,1] int32; t = absolute position — scalar
     (lockstep batch) or ``[B]`` vector (continuous batching / ragged rows,
     each cache row at its own position).
 
-    Returns (logits [B,1,V], new_state).
+    ``attn_impl`` ("auto" | "dense" | "flash") picks the attention leaf
+    for every ATTN/SWA/LOCAL block (see attention.decode_attention); it
+    is static config resolved at trace time, so executable caches must
+    key on it. Returns (logits [B,1,V], new_state).
     """
     x = layers.embed_tokens(cfg, params["embed"], tokens)
     x = shard(x, "dp", None, None)
@@ -433,7 +437,7 @@ def decode_step(cfg: ModelConfig, params: dict, state: dict,
             new_blk_state = {}
             for i, kind in enumerate(cfg.pattern):
                 h, s = _decode_block(cfg, kind, blk_params[str(i)], h,
-                                     blk_state[str(i)], t)
+                                     blk_state[str(i)], t, attn_impl)
                 new_blk_state[str(i)] = s
             return h, new_blk_state
         x, new_state["blocks"] = _repeat_blocks(
@@ -443,9 +447,73 @@ def decode_step(cfg: ModelConfig, params: dict, state: dict,
         new_state["tail"] = {}
         for i, kind in enumerate(cfg.remainder):
             x, s = _decode_block(cfg, kind, params["tail"][str(i)], x,
-                                 state["tail"][str(i)], t)
+                                 state["tail"][str(i)], t, attn_impl)
             new_state["tail"][str(i)] = s
 
     x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = layers.lm_logits(cfg, params["embed"], x)
+    return shard(logits, "dp", None, "tp"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: extend a decode state by a block of prompt tokens
+# ---------------------------------------------------------------------------
+
+def _extend_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
+                  state: dict, t0: jax.Array):
+    if kind not in (ATTN, SWA, LOCAL):
+        raise ValueError(
+            f"chunked prefill needs an attention-only stack, got {kind!r}")
+    h = layers.apply_norm(cfg, p["norm"], x)
+    h, state = attention.extend_attention(cfg, p["attn"], h, state, t0, kind)
+    x = x + h
+    h = layers.apply_norm(cfg, p["mlp_norm"], x)
+    if cfg.num_experts:
+        h, _ = moe.apply_moe(cfg, p["mlp"], h)
+    else:
+        h = layers.apply_mlp(cfg, p["mlp"], h)
+    x = x + h
+    return x, state
+
+
+def prefill_extend(cfg: ModelConfig, params: dict, state: dict,
+                   tokens: jax.Array, t0: jax.Array):
+    """Advance a decode state by a chunk of ``C`` prompt tokens.
+
+    tokens [B,C] int32 at absolute positions ``t0 .. t0+C-1``; ``state``
+    comes from ``init_decode_state`` (first chunk: positions mask every
+    zeroed slot invalid) or a previous ``prefill_extend``. Attention-only
+    stacks: recurrent blocks (RG-LRU / Mamba) would need their own chunk
+    scan, and XATTN needs frontend memory — the engine gates those to the
+    monolithic exact-length prefill.
+
+    Returns (last-position logits [B,1,V], new_state positioned at
+    ``t0 + C``) — feed the next chunk at ``t0 + C``, or sample the first
+    generated token from the logits after the final chunk.
+    """
+    x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = shard(x, "dp", None, None)
+    new_state: dict[str, Any] = {}
+
+    if "blocks" in params:
+        def body(h, inputs):
+            blk_params, blk_state = inputs
+            new_blk_state = {}
+            for i, kind in enumerate(cfg.pattern):
+                h, s = _extend_block(cfg, kind, blk_params[str(i)], h,
+                                     blk_state[str(i)], t0)
+                new_blk_state[str(i)] = s
+            return h, new_blk_state
+        x, new_state["blocks"] = _repeat_blocks(
+            body, x, params["blocks"], extra=state["blocks"])
+
+    if "tail" in params:
+        new_state["tail"] = {}
+        for i, kind in enumerate(cfg.remainder):
+            x, s = _extend_block(cfg, kind, params["tail"][str(i)], x,
+                                 state["tail"][str(i)], t0)
+            new_state["tail"][str(i)] = s
+
+    x = layers.apply_norm(cfg, params["final_norm"], x[:, -1:])
     logits = layers.lm_logits(cfg, params["embed"], x)
     return shard(logits, "dp", None, "tp"), new_state

@@ -15,24 +15,89 @@ from repro.models import transformer
 from repro.models.config import ModelConfig
 
 
+def make_sampler(temperature: float = 0.0, top_k: Optional[int] = None):
+    """Build a jit-safe sampler: (logits [B,1,V], key) -> tokens [B,1].
+
+    ``temperature`` / ``top_k`` are *static config* closed over the
+    returned function, decided in Python before any trace — the previous
+    ``sample_from_logits`` read ``temperature`` with Python truthiness,
+    which throws the moment the value is a traced operand (as it would be
+    inside the fused decode scan). temperature == 0.0 keeps the exact
+    argmax guarantee; otherwise gumbel-max sampling, optionally truncated
+    to the ``top_k`` highest logits.
+    """
+    temperature = float(temperature)
+
+    def sample(logits: jax.Array, key: Optional[jax.Array] = None):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        x = logits.astype(jnp.float32)
+        if top_k is not None:
+            kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+            x = jnp.where(x < kth, -jnp.inf, x)
+        noise = jax.random.gumbel(key, x.shape, jnp.float32)
+        return jnp.argmax(x / temperature + noise, axis=-1).astype(jnp.int32)
+
+    return sample
+
+
 def sample_from_logits(logits: jax.Array, key: Optional[jax.Array],
                        temperature: float = 0.0) -> jax.Array:
-    """logits [B,1,V] -> tokens [B,1]."""
-    if temperature and key is not None:
-        noise = jax.random.gumbel(key, logits.shape, jnp.float32)
-        logits = logits.astype(jnp.float32) / temperature + noise
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    """logits [B,1,V] -> tokens [B,1] (compat shim over make_sampler)."""
+    return make_sampler(temperature)(logits, key)
 
 
-def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0,
+                    top_k: Optional[int] = None, attn_impl: str = "auto"):
     """(params, state, tokens [B,1], t) -> (next_tokens [B,1], new_state)."""
+    sampler = make_sampler(temperature, top_k)
 
     def serve_step(params, state, tokens, t, key=None):
-        logits, state = transformer.decode_step(cfg, params, state, tokens, t)
-        nxt = sample_from_logits(logits, key, temperature)
-        return nxt, state
+        logits, state = transformer.decode_step(cfg, params, state, tokens,
+                                                t, attn_impl=attn_impl)
+        return sampler(logits, key), state
 
     return serve_step
+
+
+def make_fused_serve_step(cfg: ModelConfig, steps: int,
+                          temperature: float = 0.0,
+                          top_k: Optional[int] = None,
+                          attn_impl: str = "auto"):
+    """``steps`` decode+sample iterations fused into ONE executable.
+
+    (params, state, tokens [B,1], t [B], key?) ->
+        (token_block [B,steps], new_state, next_tokens [B,1], t + steps,
+         next_key)
+
+    The sampler and the per-row feed-token / position updates run inside a
+    ``lax.scan``, so the PRNG key, ``tokens`` and ``t`` stay device
+    residents and the host syncs once per window instead of once per
+    token. Greedy (temperature 0) carries no key (``key=None`` round-trips
+    as None). The token block is everything the host needs: EOS /
+    ``max_new`` retirement is detected on the sync by slicing each row's
+    block to its own stop point — bit-identical to stepping one token at a
+    time, because the scan body IS the single-step path.
+    """
+    sampler = make_sampler(temperature, top_k)
+
+    def fused(params, state, tokens, t, key=None):
+        def body(carry, _):
+            state, tok, t, key = carry
+            if key is not None:
+                key, sub = jax.random.split(key)
+            else:
+                sub = None
+            logits, state = transformer.decode_step(cfg, params, state, tok,
+                                                    t, attn_impl=attn_impl)
+            nxt = sampler(logits, sub)
+            return (state, nxt, t + 1, key), nxt[:, 0]
+
+        (state, tok, t, key), toks = jax.lax.scan(
+            body, (state, tokens, t, key), None, length=steps)
+        return jnp.moveaxis(toks, 0, 1), state, tok, t, key
+
+    return fused
 
 
 def make_prefill(cfg: ModelConfig, context_len: Optional[int] = None):
@@ -43,13 +108,27 @@ def make_prefill(cfg: ModelConfig, context_len: Optional[int] = None):
     return prefill_step
 
 
-# Jitted-executable caches for generate(): make_serve_step/make_prefill
-# return fresh closures, so a bare jax.jit around them would recompile on
-# EVERY generate() call — ~seconds per serving batch, dwarfing the actual
-# step. Keyed on (cfg, temperature/context_len); ModelConfig is frozen.
+# Jitted-executable caches: make_serve_step/make_prefill return fresh
+# closures, so a bare jax.jit around them would recompile on EVERY
+# generate() call — ~seconds per serving batch, dwarfing the actual step.
+# Keyed on the full static config (cfg, temperature, top_k, attn_impl /
+# context_len); ModelConfig is frozen. attn_impl MUST be part of the key:
+# the kernel-vs-dense choice is baked in at trace time.
 @functools.lru_cache(maxsize=None)
-def _cached_step(cfg: ModelConfig, temperature: float):
-    return jax.jit(make_serve_step(cfg, temperature))
+def _cached_step(cfg: ModelConfig, temperature: float,
+                 top_k: Optional[int] = None, attn_impl: str = "auto"):
+    return jax.jit(make_serve_step(cfg, temperature, top_k, attn_impl))
+
+
+@functools.lru_cache(maxsize=None)
+def cached_fused_step(cfg: ModelConfig, steps: int, temperature: float,
+                      top_k: Optional[int] = None, attn_impl: str = "auto"):
+    """Shared fused-window executables (engines come and go; the compiled
+    K-step scan is reusable across instances). state/tokens/t are donated:
+    the engine threads them through as device residents."""
+    return jax.jit(make_fused_serve_step(cfg, steps, temperature, top_k,
+                                         attn_impl),
+                   donate_argnums=(1, 2, 3))
 
 
 @functools.lru_cache(maxsize=None)
@@ -80,7 +159,8 @@ def _check_ragged_supported(cfg: ModelConfig, S: int, context_len: int):
 def generate(cfg: ModelConfig, params, prompt: jax.Array, max_new: int,
              context_len: Optional[int] = None, temperature: float = 0.0,
              key: Optional[jax.Array] = None, memory=None,
-             lengths: Optional[jax.Array] = None):
+             lengths: Optional[jax.Array] = None,
+             top_k: Optional[int] = None, attn_impl: str = "auto"):
     """Convenience loop for examples/tests: prefill + greedy decode.
 
     prompt [B, S] -> tokens [B, S + max_new].
@@ -112,8 +192,9 @@ def generate(cfg: ModelConfig, params, prompt: jax.Array, max_new: int,
                                             memory=memory,
                                             context_len=context_len)
     last_logits = jnp.take_along_axis(logits, (t0 - 1)[:, None, None], axis=1)
-    last = sample_from_logits(last_logits, key, temperature)
-    step = _cached_step(cfg, temperature)
+    sampler = make_sampler(temperature, top_k)
+    last = sampler(last_logits, key)
+    step = _cached_step(cfg, temperature, top_k, attn_impl)
     gen = [last]
     tok = last
     for i in range(max_new - 1):

@@ -10,11 +10,36 @@ replaces that with *iteration-level* scheduling:
   * a persistent decode loop steps ALL occupied slots together, each at
     its own absolute position (``decode_step`` with a per-row ``t``
     vector — ring-position masking keeps ragged rows correct);
-  * arrivals are admitted into free slots *between* decode steps: the
+  * decode runs in *fused windows*: sampling and the per-row
+    feed-token/position updates live inside one jitted ``lax.scan``
+    (``serve.decode.make_fused_serve_step``), so the feed tokens, the
+    position vector, and the PRNG key stay device-resident and the host
+    syncs one ``[num_slots, K]`` token block per window instead of one
+    token per step. ``sync_every`` caps K (default 8); each window's K
+    is picked from the power-of-two ladder by useful-tokens-per-cost
+    (see ``step``), so draining tails shrink the window instead of
+    burning speculative steps and at most log2(sync_every)+1
+    executables exist. EOS / ``max_new``
+    retirement is detected on the sync by slicing each row's block to
+    its own stop point — bit-identical to syncing every step, because
+    the scan body IS the single-step path;
+  * ``decode_impl`` picks the attention leaf ("auto" | "dense" |
+    "flash"): flash routes through the ``kernels.ops`` dispatcher — the
+    one-HBM-pass flash-decode kernel on TPU, its jnp oracle as a native
+    XLA executable elsewhere — with the ring-validity mask handed to the
+    kernel as its precomputed ``valid`` mask;
+  * arrivals are admitted into free slots *between* windows: the
     request is prefilled alone at its exact prompt length and its
     per-layer state is written into the free row with
     ``transformer.write_decode_slot`` (a donated dynamic-update, so
     admission never copies or perturbs in-flight rows);
+  * with ``prefill_chunk`` set, a long prompt prefills in fixed-size
+    chunks interleaved between decode windows (``prefill_extend``
+    against a reserved slot's own B=1 state), so a long prompt never
+    stalls in-flight decode for its full prefill. Chunking needs an
+    attention-only stack; other stacks (and short prompts) fall back to
+    the monolithic exact-length prefill. Admission order stays strict
+    FCFS: while a chunked prefill is in progress, later arrivals wait;
   * a sequence retires the moment it finishes (EOS or its ``max_new``
     budget) and its slot is immediately reusable — nobody waits for a
     batch-mate;
@@ -36,17 +61,24 @@ stacks are).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import queue
 import threading
 import time
 from concurrent import futures as cf
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
 from repro.models.config import ModelConfig
+
+_CHUNKABLE_KINDS = {"attn", "swa", "local"}
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << (n - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -64,6 +96,17 @@ class _Slot:
     generated: list
 
 
+@dataclasses.dataclass
+class _PendingPrefill:
+    """A chunked prefill in flight: the request holds its reserved slot
+    while its prompt streams through ``prefill_extend`` one chunk per
+    engine step, against its own B=1 state."""
+    request: _Request
+    slot: int
+    state: Any                    # B=1 decode state (chunk-extended)
+    consumed: int                 # prompt tokens already prefilled
+
+
 class ServeEngine:
     """Continuous-batching serve engine.
 
@@ -77,8 +120,11 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 8,
                  context_len: int = 64, max_new: int = 16,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, sync_every: int = 8,
+                 top_k: Optional[int] = None, decode_impl: str = "auto",
+                 prefill_chunk: Optional[int] = None):
         import jax
+        import jax.numpy as jnp
         from repro.models import transformer
         from repro.serve import decode as serve_lib
 
@@ -86,6 +132,11 @@ class ServeEngine:
             raise ValueError(f"{cfg.name} has no autoregressive decode step")
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
+        if sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        if decode_impl not in ("auto", "dense", "flash"):
+            raise ValueError(f"decode_impl must be auto|dense|flash, "
+                             f"got {decode_impl!r}")
         self._cfg = cfg
         self._params = params
         self._ns = num_slots
@@ -93,32 +144,69 @@ class ServeEngine:
         self._max_new = max_new
         self._eos = eos_id
         self._temp = temperature
+        self._top_k = top_k
+        self._impl = decode_impl
+        self._sync = sync_every
         self._key = jax.random.key(seed) if temperature else None
+
+        kinds = set(cfg.pattern) | set(cfg.remainder)
+        self._chunk = prefill_chunk
+        self._can_chunk = (prefill_chunk is not None
+                           and kinds <= _CHUNKABLE_KINDS
+                           and not cfg.conv_pos)
+        if prefill_chunk is not None:
+            ring = min((min(context_len, cfg.window or context_len)
+                        if k in ("swa", "local") else context_len)
+                       for k in kinds)
+            if not 1 <= prefill_chunk <= ring:
+                raise ValueError(
+                    f"prefill_chunk ({prefill_chunk}) must be in [1, "
+                    f"{ring}] (the smallest cache ring) — a larger chunk "
+                    "would overwrite slots its own queries still attend to")
 
         self._state = transformer.init_decode_state(cfg, num_slots,
                                                     context_len)
         self._slots: list[Optional[_Slot]] = [None] * num_slots
         self._free: list[int] = list(range(num_slots - 1, -1, -1))
-        self._tokens = np.zeros((num_slots, 1), np.int32)   # next feed
-        self._t = np.zeros((num_slots,), np.int32)          # per-row pos
+        # Device-resident hot state: the feed tokens and per-row positions
+        # live on device between syncs (rebuilding them from host numpy
+        # every step was a measurable per-step tax), and the fused window
+        # threads them through donated buffers.
+        self._tokens_dev = jnp.zeros((num_slots, 1), jnp.int32)
+        self._t_dev = jnp.zeros((num_slots,), jnp.int32)
 
-        self._decode = jax.jit(serve_lib.make_serve_step(cfg, temperature),
-                               donate_argnums=(1,))
+        # Fused-window executables, shared across engine instances via the
+        # lru cache in serve.decode (keyed on every static knob, attn_impl
+        # included — the kernel-vs-dense choice is baked at trace time).
+        self._fused = functools.partial(
+            serve_lib.cached_fused_step, cfg, temperature=temperature,
+            top_k=top_k, attn_impl=decode_impl)
+        self._sampler = jax.jit(serve_lib.make_sampler(temperature, top_k))
 
         def _prefill_fn(params, tokens, key=None):
             logits, state = transformer.prefill(cfg, params, tokens=tokens,
                                                 context_len=context_len)
-            nxt = serve_lib.sample_from_logits(logits[:, -1:], key,
-                                               temperature)
+            nxt = serve_lib.make_sampler(temperature, top_k)(
+                logits[:, -1:], key)
             return nxt, state
 
         # One executable per distinct prompt length (jit's shape cache).
         self._prefill = jax.jit(_prefill_fn)
+        self._extend = jax.jit(
+            functools.partial(transformer.prefill_extend, cfg),
+            donate_argnums=(1,))
         self._write = jax.jit(
             functools.partial(transformer.write_decode_slot, cfg),
             donate_argnums=(0,))
 
+        def _row_write_fn(tokens, t, i, tok, tval):
+            return tokens.at[i, 0].set(tok), t.at[i].set(tval)
+
+        self._row_write = jax.jit(_row_write_fn, donate_argnums=(0, 1))
+
         self._queue: queue.Queue[_Request] = queue.Queue()
+        self._ready: collections.deque[_Request] = collections.deque()
+        self._pending: Optional[_PendingPrefill] = None
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -126,7 +214,8 @@ class ServeEngine:
         self._lock = threading.Lock()                       # stats + lifecycle
         self._counters = dict(submitted=0, admitted=0, retired=0, failed=0,
                               steps=0, decode_tokens=0, generated_tokens=0,
-                              occupancy_sum=0, peak_occupancy=0)
+                              occupancy_sum=0, peak_occupancy=0,
+                              host_syncs=0)
         # EWMA decode-step microseconds per token: the routing signal a
         # load balancer uses to weigh this engine against its siblings.
         self._ewma_us_tok = 0.0
@@ -164,18 +253,54 @@ class ServeEngine:
         return fut
 
     # -- engine side ---------------------------------------------------------
+    def _activate(self, req: _Request, i: int, first: int) -> None:
+        """Mark slot ``i`` live: host bookkeeping + the device-resident
+        feed-token/position rows (one donated row write, no full-array
+        host->device rebuild)."""
+        import jax.numpy as jnp
+        self._slots[i] = _Slot(request=req, t=len(req.prompt),
+                               generated=[first])
+        self._tokens_dev, self._t_dev = self._row_write(
+            self._tokens_dev, self._t_dev, jnp.int32(i), jnp.int32(first),
+            jnp.int32(len(req.prompt)))
+        with self._lock:
+            self._counters["admitted"] += 1
+            self._counters["host_syncs"] += 1   # the first-token pull
+        if (self._eos is not None and first == self._eos) \
+                or req.max_new <= 1:
+            self._retire(i)
+
     def _admit(self) -> None:
         """Move queued requests into free slots: exact-length prefill, then
-        write the fresh per-layer state into the slot's cache row."""
+        write the fresh per-layer state into the slot's cache row. Long
+        prompts (with ``prefill_chunk`` on an attention-only stack) are
+        parked as a _PendingPrefill instead and stream through
+        ``_advance_chunk`` one chunk per step; admission order stays
+        strict FCFS, so later arrivals wait behind an in-flight chunked
+        prefill rather than jumping it."""
         import jax.numpy as jnp
-        while self._free:
+        while True:
             try:
-                req = self._queue.get_nowait()
+                self._ready.append(self._queue.get_nowait())
             except queue.Empty:
-                return
+                break
+        while self._free and self._ready:
+            req = self._ready[0]
+            chunked = self._can_chunk and len(req.prompt) > self._chunk
+            if chunked and self._pending is not None:
+                return                          # FCFS: wait for the pending
+            self._ready.popleft()
             if not req.future.set_running_or_notify_cancel():
                 continue                                    # cancelled
             i = self._free.pop()
+            if chunked:
+                from repro.models import transformer
+                self._pending = _PendingPrefill(
+                    request=req, slot=i,
+                    state=transformer.init_decode_state(self._cfg, 1,
+                                                        self._L),
+                    consumed=0)
+                continue
             try:
                 key = self._split_key()
                 nxt, slot_state = self._prefill(
@@ -191,15 +316,41 @@ class ServeEngine:
                     self._counters["failed"] += 1
                 req.future.set_exception(exc)
                 continue
-            self._slots[i] = _Slot(request=req, t=len(req.prompt),
-                                   generated=[first])
-            self._t[i] = len(req.prompt)
-            self._tokens[i, 0] = first
+            self._activate(req, i, first)
+
+    def _advance_chunk(self) -> bool:
+        """Run ONE prefill chunk of the pending request (if any) between
+        decode windows. The final chunk's logits seed the first generated
+        token, and only then does the accumulated B=1 state land in the
+        reserved slot row. Returns True if a chunk ran."""
+        import jax.numpy as jnp
+        p = self._pending
+        if p is None:
+            return False
+        prompt = p.request.prompt
+        c0 = p.consumed
+        c1 = min(c0 + self._chunk, len(prompt))
+        try:
+            toks = jnp.asarray(prompt[None, c0:c1])
+            logits, p.state = self._extend(self._params, p.state, toks,
+                                           jnp.int32(c0))
+            p.consumed = c1
+            if c1 < len(prompt):
+                return True
+            nxt = self._sampler(logits, self._split_key())
+            first = int(np.asarray(nxt)[0, 0])
+            self._state = self._write(self._state, p.state,
+                                      jnp.int32(p.slot))
+        except Exception as exc:                            # noqa: BLE001
+            self._free.append(p.slot)
+            self._pending = None
             with self._lock:
-                self._counters["admitted"] += 1
-            if (self._eos is not None and first == self._eos) \
-                    or req.max_new <= 1:
-                self._retire(i)
+                self._counters["failed"] += 1
+            p.request.future.set_exception(exc)
+            return True
+        self._pending = None
+        self._activate(p.request, p.slot, first)
+        return True
 
     def _split_key(self):
         if self._key is None:
@@ -209,46 +360,80 @@ class ServeEngine:
         return sub
 
     def step(self) -> int:
-        """One engine iteration: admit arrivals, then decode every occupied
-        slot one token. Returns the number of slots that decoded (0 =
-        idle). Call from a single driver thread only."""
-        import jax.numpy as jnp
-        self._admit()
+        """One engine iteration: advance a pending chunked prefill, admit
+        arrivals, then decode every occupied slot one fused window.
+        Returns the number of slots that decoded (0 = idle). Call from a
+        single driver thread only.
+
+        Chunk admission is budgeted at one chunk per decode step — up to
+        ``sync_every`` chunks per engine iteration, since the fused
+        window below covers that many steps. Advancing only one chunk
+        per *window* would stretch a chunked prompt's admission (and,
+        under strict FCFS, everyone queued behind it) by the window
+        length."""
+        progressed = False
+        for _ in range(self._sync):
+            progressed |= self._advance_chunk()
+            self._admit()
+            if self._pending is None:
+                break
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
-            return 0
+            return 1 if progressed else 0
+        # Window length: picked per window from the power-of-two ladder up
+        # to sync_every (so at most log2(sync_every)+1 executables exist)
+        # by scoring useful tokens per unit cost. A window costs ~K decode
+        # steps plus ~one step of sync/dispatch overhead, and a row only
+        # uses min(K, its remaining budget) of it — tokens past a row's
+        # retirement are speculative waste. Maximizing
+        # sum(min(K, rem)) / (K + 1) batches syncs when budgets are deep
+        # and shrinks the window when most rows are about to retire,
+        # instead of burning a full window on a draining tail.
+        rems = [s.request.max_new - len(s.generated)
+                for s in self._slots if s is not None]
+        k_eff, best, k = 1, -1.0, 1
+        while k <= self._sync:
+            score = sum(min(k, r) for r in rems) / (k + 1)
+            if score > best:
+                best, k_eff = score, k
+            k = min(k * 2, self._sync) if k < self._sync else k * 2
         t0 = time.perf_counter()
-        nxt, self._state = self._decode(
-            self._params, self._state, jnp.asarray(self._tokens),
-            jnp.asarray(self._t), self._split_key())
-        nxt = np.asarray(nxt)                       # host sync ends the step
-        us_tok = (time.perf_counter() - t0) * 1e6 / len(active)
+        toks, self._state, self._tokens_dev, self._t_dev, key = \
+            self._fused(k_eff)(self._params, self._state, self._tokens_dev,
+                               self._t_dev, self._key)
+        if self._key is not None:
+            self._key = key
+        toks = np.asarray(toks)           # ONE host sync per K-token window
+        us_tok = (time.perf_counter() - t0) * 1e6 / (len(active) * k_eff)
         with self._lock:
             c = self._counters
-            c["steps"] += 1
-            c["decode_tokens"] += len(active)
-            c["occupancy_sum"] += len(active)
+            c["steps"] += k_eff
+            c["decode_tokens"] += len(active) * k_eff
+            c["occupancy_sum"] += len(active) * k_eff
             c["peak_occupancy"] = max(c["peak_occupancy"], len(active))
+            c["host_syncs"] += 1
             self._ewma_us_tok = us_tok if self._ewma_us_tok == 0.0 \
                 else 0.2 * us_tok + 0.8 * self._ewma_us_tok
         for i in active:
             slot = self._slots[i]
-            tok = int(nxt[i, 0])
-            slot.generated.append(tok)
-            slot.t += 1
-            self._t[i] = slot.t
-            self._tokens[i, 0] = tok
-            if (self._eos is not None and tok == self._eos) \
-                    or len(slot.generated) >= slot.request.max_new:
-                self._retire(i)
+            # Slice this row's block to its own stop point: tokens past EOS
+            # or the max_new budget were computed speculatively inside the
+            # window and are simply dropped (the ring rows they touched are
+            # rewritten on the slot's next admission).
+            for j in range(k_eff):
+                tok = int(toks[i, j])
+                slot.generated.append(tok)
+                slot.t += 1
+                if (self._eos is not None and tok == self._eos) \
+                        or len(slot.generated) >= slot.request.max_new:
+                    self._retire(i)
+                    break
         return len(active)
 
     def _retire(self, i: int) -> None:
         slot = self._slots[i]
         self._slots[i] = None
         self._free.append(i)
-        self._tokens[i, 0] = 0
-        self._t[i] = 0
         out = np.concatenate([slot.request.prompt,
                               np.asarray(slot.generated, np.int32)])
         with self._lock:
@@ -257,6 +442,27 @@ class ServeEngine:
         slot.request.future.set_result(out)
 
     # -- lifecycle -----------------------------------------------------------
+    def warmup(self) -> "ServeEngine":
+        """Compile every fused-window executable this engine can select
+        (the power-of-two K ladder up to ``sync_every``) against throwaway
+        state, so no window compiles mid-serving. Prompt-length prefill
+        shapes still compile on first sight — warm those by submitting
+        representative prompts."""
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer
+        state = transformer.init_decode_state(self._cfg, self._ns, self._L)
+        toks = jnp.zeros((self._ns, 1), jnp.int32)
+        t = jnp.zeros((self._ns,), jnp.int32)
+        key = None if self._key is None else jax.random.key(0)
+        k = 1
+        while k <= self._sync:
+            out = self._fused(k)(self._params, state, toks, t, key)
+            _, state, toks, t, key = out
+            jax.block_until_ready(out)
+            k = min(k * 2, self._sync) if k < self._sync else k * 2
+        return self
+
     def start(self) -> "ServeEngine":
         if self._thread is None:
             self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -287,6 +493,14 @@ class ServeEngine:
                 break
             if req.future.set_running_or_notify_cancel():
                 req.future.set_exception(err)
+        while self._ready:
+            req = self._ready.popleft()
+            if req.future.set_running_or_notify_cancel():
+                req.future.set_exception(err)
+        if self._pending is not None:
+            p, self._pending = self._pending, None
+            self._free.append(p.slot)
+            p.request.future.set_exception(err)
         for i, slot in enumerate(self._slots):
             if slot is not None:
                 self._slots[i] = None
@@ -322,9 +536,11 @@ class ServeEngine:
             s["ewma_us_per_token"] = self._ewma_us_tok
         s["num_slots"] = self._ns
         s["free_slots"] = len(self._free)
-        s["queue_depth"] = self._queue.qsize()
+        s["queue_depth"] = self._queue.qsize() + len(self._ready)
         s["mean_occupancy"] = (s["occupancy_sum"] / s["steps"]
                                if s["steps"] else 0.0)
+        s["syncs_per_token"] = (s["host_syncs"] / s["generated_tokens"]
+                                if s["generated_tokens"] else 0.0)
         return s
 
     def load(self) -> dict:
@@ -335,5 +551,5 @@ class ServeEngine:
             ewma = self._ewma_us_tok
             free = len(self._free)
         return {"num_slots": self._ns, "free_slots": free,
-                "queue_depth": self._queue.qsize(),
+                "queue_depth": self._queue.qsize() + len(self._ready),
                 "ewma_us_per_token": ewma}

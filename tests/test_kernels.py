@@ -89,6 +89,45 @@ def test_decode_attention_sweep(case, dtype):
                                np.asarray(expect, np.float32), **_tol(dtype))
 
 
+def test_decode_attention_dispatch_paths_agree():
+    """Both dispatcher leaves — the Pallas body (interpret) and the jit'd
+    oracle — must agree on ragged masks INCLUDING an all-invalid row,
+    where the shared contract is zeros (the kernel's online-softmax
+    accumulator never runs for such a row)."""
+    B, H, KV, dh, L = 3, 4, 2, 64, 256
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, KV, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, KV, dh), jnp.float32)
+    valid = jax.random.bernoulli(ks[3], 0.5, (B, L))
+    valid = valid.at[0].set(True).at[1].set(False)   # full / empty / ragged
+    out_pl = ops.decode_attention(q, k, v, valid, block_l=64,
+                                  impl="pallas", interpret=True)
+    out_ref = ops.decode_attention(q, k, v, valid, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out_pl[1]),
+                                  np.zeros((H, dh), np.float32))
+
+
+def test_decode_dispatch_resolution(monkeypatch):
+    """Dispatch priority: explicit impl > REPRO_FORCE_REF > interpret
+    flag > backend default (ref everywhere but TPU)."""
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    assert ops.resolve_decode_impl(impl="ref") == "ref"
+    assert ops.resolve_decode_impl(impl="pallas") == "pallas"
+    assert ops.resolve_decode_impl(interpret=True) == "pallas"
+    default = ops.resolve_decode_impl()
+    assert default == ("pallas" if jax.default_backend() == "tpu"
+                       else "ref")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    assert ops.resolve_decode_impl() == "ref"
+    assert ops.resolve_decode_impl(interpret=True) == "ref"
+    assert ops.resolve_decode_impl(impl="pallas") == "pallas"  # pin wins
+    with pytest.raises(ValueError):
+        ops.resolve_decode_impl(impl="dense")
+
+
 def test_decode_attention_ring_semantics_match_model():
     """Kernel + ring-validity mask == the model's decode_attention maths."""
     B, L, KV, dh, t = 2, 64, 2, 32, 100
