@@ -104,3 +104,71 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
     )(qt, kt, vt, valid_i)
     return out[:, :, 0, :]
+
+
+def _paged_kernel(pages_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, sm_scale: float):
+    # Same online-softmax body as _decode_kernel; pages_ref is consumed by
+    # the index maps (scalar prefetch), not the body.
+    del pages_ref
+    _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_scr, l_scr, acc_scr, sm_scale=sm_scale)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pages: jax.Array,
+                           valid: jax.Array, *,
+                           sm_scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """Flash-decode over a paged KV pool.
+
+    q [B,H,dh]; k/v pages [P,ps,KV,dh]; pages [B,n] int32; valid [B,n*ps]
+    over logical slots -> [B,H,dh].
+
+    The natural block is one page: grid step (b, h, j) streams row b's
+    j-th *logical* page, and the page list rides in as a scalar-prefetch
+    operand so the K/V index maps can point the DMA at the physical page
+    ``pages[b, j]`` — the gather never materializes. The ``valid`` mask is
+    logical-slot indexed, so its index map stays (b, j). Online-softmax
+    state in VMEM scratch, identical to the flat kernel.
+    """
+    B, H, dh = q.shape
+    P, ps, KV = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    n = pages.shape[1]
+    assert valid.shape == (B, n * ps), (valid.shape, B, n, ps)
+    assert H % KV == 0
+    group = H // KV
+    sm_scale = sm_scale if sm_scale is not None else dh ** -0.5
+
+    qt = q[:, :, None, :]                       # [B, H, 1, dh]
+    kt = k_pages.transpose(2, 0, 1, 3)          # [KV, P, ps, dh]
+    vt = v_pages.transpose(2, 0, 1, 3)
+    valid_i = valid.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, j, pg: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda b, h, j, pg: (h // group, pg[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, ps, dh),
+                         lambda b, h, j, pg: (h // group, pg[b, j], 0, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, j, pg: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda b, h, j, pg: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, dh), q.dtype),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), qt, kt, vt, valid_i)
+    return out[:, :, 0, :]

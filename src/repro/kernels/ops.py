@@ -102,6 +102,32 @@ def decode_attention(q, k, v, valid, block_l: int = 512,
                           _pick_block_l(k.shape[1], block_l), interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode_pallas(q, k_pages, v_pages, pages, valid, interpret: bool):
+    return _dec.paged_decode_attention(q, k_pages, v_pages, pages, valid,
+                                       interpret=interpret)
+
+
+_paged_decode_ref = jax.jit(_ref.paged_decode_attention)
+
+
+def paged_decode_attention(q, k_pages, v_pages, pages, valid,
+                           interpret: Optional[bool] = None,
+                           impl: Optional[str] = None):
+    """Backend-dispatched paged decode attention (same rule as the flat
+    path — resolve_decode_impl — so CPU CI exercises the identical
+    dispatch wiring with the jnp oracle as the leaf).
+
+    q [B,H,dh]; k/v pages [P,ps,KV,dh]; pages [B,n] int32; valid [B,n*ps]
+    -> [B,H,dh]. The block size is the page itself: the kernel walks the
+    page list one physical page per grid step via scalar prefetch.
+    """
+    if resolve_decode_impl(impl, interpret) == "ref":
+        return _paged_decode_ref(q, k_pages, v_pages, pages, valid)
+    interpret = _auto_interpret() if interpret is None else interpret
+    return _paged_decode_pallas(q, k_pages, v_pages, pages, valid, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "block_w",
                                              "interpret"))
 def rglru_scan(a, x, h0, block_s: int = 256, block_w: int = 128,

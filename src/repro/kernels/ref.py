@@ -68,6 +68,28 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, pages: jax.Array,
+                           valid: jax.Array,
+                           sm_scale: Optional[float] = None) -> jax.Array:
+    """One-token attention against a *paged* cache.
+
+    q [B,H,dh]; k/v pages [P,ps,KV,dh]; pages [B,n] int32 (per-row page
+    list); valid [B,n*ps] bool over *logical* slots -> [B,H,dh].
+
+    Semantically: gather each row's pages into its logical [n*ps] cache
+    view, then exactly ``decode_attention`` — including the all-invalid ->
+    zeros contract. The Pallas kernel walks the page list block-by-block
+    instead of materializing the gather.
+    """
+    B = q.shape[0]
+    ps, KV, dh = k_pages.shape[1:]
+    n = pages.shape[1]
+    k = k_pages[pages].reshape(B, n * ps, KV, dh)
+    v = v_pages[pages].reshape(B, n * ps, KV, dh)
+    return decode_attention(q, k, v, valid, sm_scale)
+
+
 def rglru_scan(a: jax.Array, x: jax.Array, h0: jax.Array) -> tuple:
     """Sequential linear recurrence h_t = a_t h_{t-1} + x_t (all fp32).
 

@@ -119,7 +119,10 @@ class EngineServer:
                  name: str | None = None, endpoint: str | None = None,
                  mesh=None, sync_every: int = 8, decode_impl: str = "auto",
                  top_k: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 page_size: int | None = None,
+                 num_pages: int | None = None,
+                 prefix_cache: bool = True):
         import jax
         from repro.models import transformer
         from repro.serve.engine import ServeEngine
@@ -131,7 +134,8 @@ class EngineServer:
             context_len=context_len or 128,
             max_new=max_new, eos_id=eos_id, sync_every=sync_every,
             decode_impl=decode_impl, top_k=top_k,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, page_size=page_size,
+            num_pages=num_pages, prefix_cache=prefix_cache)
         self._engine.start()
         self._heartbeater = None
         if registry is not None:
@@ -392,7 +396,9 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                   meter_json: str | None = None, replicas: int = 1,
                   routers: int = 0, registry_ttl_s: float = 2.0,
                   heartbeat_s: float = 0.25,
-                  kill_after: int | None = None) -> lp.Program:
+                  kill_after: int | None = None,
+                  page_size: int | None = None,
+                  num_pages: int | None = None) -> lp.Program:
     """Wire the serving topology as a Launchpad program.
 
     ``routers == 0`` (default) is the direct PR-4 path — one engine (or
@@ -417,7 +423,8 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
             if mode == "continuous":
                 server = p.add_node(lp.MeshWorkerNode(
                     EngineServer, model_cfg, max_new=max_new,
-                    num_slots=num_slots, context_len=prompt_len + max_new))
+                    num_slots=num_slots, context_len=prompt_len + max_new,
+                    page_size=page_size, num_pages=num_pages))
             else:
                 server = p.add_node(lp.MeshWorkerNode(ModelServer, model_cfg,
                                                       max_new=max_new))
@@ -451,6 +458,7 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
             replica_handles.append(p.add_node(lp.MeshWorkerNode(
                 EngineServer, model_cfg, max_new=max_new,
                 num_slots=num_slots, context_len=prompt_len + max_new,
+                page_size=page_size, num_pages=num_pages,
                 registry=registry, heartbeat_s=heartbeat_s)))
     router_nodes, router_handles = [], []
     with p.group("router"):
@@ -517,6 +525,11 @@ def main(argv=None):
                     default="continuous")
     ap.add_argument("--slots", type=int, default=8,
                     help="KV-cache slots (continuous mode)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV mode: tokens per page (None = flat)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged KV mode: pool size in pages "
+                         "(default slots * ceil(context/page_size))")
     ap.add_argument("--meter-json", default=None,
                     help="write the latency percentile summary here")
     ap.add_argument("--replicas", type=int, default=1,
@@ -534,7 +547,8 @@ def main(argv=None):
                             mode=args.mode, num_slots=args.slots,
                             meter_json=args.meter_json,
                             replicas=args.replicas, routers=args.routers,
-                            kill_after=args.kill_after)
+                            kill_after=args.kill_after,
+                            page_size=args.page_size, num_pages=args.pages)
     print(program)
     lp.launch_and_wait(program, timeout_s=600)
 

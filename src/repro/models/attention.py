@@ -275,6 +275,79 @@ def kv_cache_spec(cfg: ModelConfig, batch: int, context_len: int,
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def paged_kv_cache_spec(cfg: ModelConfig, num_pages: int, page_size: int,
+                        dtype) -> dict:
+    """Pooled cache for one full-context attention layer: ``num_pages``
+    fixed-size pages shared by every row via a per-row page list. Physical
+    page 0 is the trash page by convention (free rows and speculative
+    post-retirement writes land there); callers size the pool accordingly."""
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def paged_decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                           cache: dict, t: jax.Array, pages: jax.Array,
+                           impl: str = "auto") -> tuple[jax.Array, dict]:
+    """Single-token decode against a *paged* KV pool (full-context ATTN
+    layers only — windowed rings are already footprint-bounded and stay
+    flat).
+
+    x [B,1,D]; cache {"k"/"v": [P, ps, KV, dh]} shared pool; ``pages``
+    [B, n] int32 maps each row's logical page j to a physical page (the
+    engine's device-resident page table). The ring modulus is the padded
+    length L = n*ps >= context_len; the engine rejects requests with
+    prompt+max_new > context_len, so positions never wrap and the flat
+    ring-validity arithmetic carries over unchanged.
+
+    The new token's K/V scatter into physical page ``pages[b, t//ps]`` at
+    offset ``t%ps`` — rows whose page-list entry is the trash page
+    (free rows, speculative tokens past a reservation) write garbage that
+    only garbage reads can see. Returns (attn out [B,1,D], updated cache).
+    """
+    B = x.shape[0]
+    ps = cache["k"].shape[1]
+    n = pages.shape[1]
+    L = n * ps
+
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    pos_new = tb[:, None]
+    if cfg.rope:
+        sin, cos = layers.rope_freqs(cfg, pos_new)
+        q = layers.apply_rope(q, sin, cos)
+        k_new = layers.apply_rope(k_new, sin, cos)
+
+    slot = jnp.mod(tb, L)                                      # [B] logical
+    pj = slot // ps
+    off = slot % ps
+    pid = jnp.take_along_axis(pages, pj[:, None], axis=1)[:, 0]  # [B] physical
+    k = cache["k"].at[pid, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[pid, off].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    # Same ring-position validity as the flat path, over logical slots.
+    idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+    k_pos = tb[:, None] - jnp.mod(tb[:, None] - idx, L)
+    valid = k_pos >= 0
+
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "dense"
+    if impl == "flash" and _flash_decode_eligible(cfg):
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.paged_decode_attention(
+            q[:, 0], k.astype(q.dtype), v.astype(q.dtype), pages, valid)
+        out = out[:, None]                                     # [B,1,H,dh]
+    else:
+        kg = k[pages].reshape(B, L, *k.shape[2:]).astype(q.dtype)
+        vg = v[pages].reshape(B, L, *v.shape[2:]).astype(q.dtype)
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        bias = bias[:, None, None, :]                          # [B,1,1,L]
+        out = _sdpa_grouped(cfg, q, kg, vg, bias)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return layers.apply_linear(p["wo"], out), {"k": k, "v": v}
+
+
 def _sdpa_grouped(cfg: ModelConfig, q, k, v, bias) -> jax.Array:
     """GQA attention without KV expansion — decode path.
 

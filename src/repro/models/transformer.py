@@ -315,7 +315,12 @@ def prefill(cfg: ModelConfig, params: dict, *, tokens=None, memory=None,
 # ---------------------------------------------------------------------------
 
 def _block_state_spec(cfg: ModelConfig, kind: str, batch: int,
-                      context_len: int, dtype) -> dict:
+                      context_len: int, dtype,
+                      page_size: Optional[int] = None,
+                      num_pages: Optional[int] = None) -> dict:
+    if kind == ATTN and page_size is not None:
+        return attention.paged_kv_cache_spec(cfg, num_pages, page_size,
+                                             dtype)
     if kind in (ATTN, SWA, LOCAL):
         return attention.kv_cache_spec(cfg, batch, context_len, kind, dtype)
     if kind == XATTN:
@@ -330,8 +335,17 @@ def _block_state_spec(cfg: ModelConfig, kind: str, batch: int,
 
 
 def decode_state_spec(cfg: ModelConfig, batch: int, context_len: int,
-                      dtype=jnp.bfloat16) -> dict:
-    """Abstract decode-state tree matching decode_step's expectations."""
+                      dtype=jnp.bfloat16, page_size: Optional[int] = None,
+                      num_pages: Optional[int] = None) -> dict:
+    """Abstract decode-state tree matching decode_step's expectations.
+
+    With ``page_size``/``num_pages`` set, full-context ATTN layers swap
+    their per-row ``[batch, L]`` rings for one shared ``[num_pages,
+    page_size]`` pool addressed through a per-row page table (see
+    ``decode_step``'s ``pages``). Windowed rings (SWA/LOCAL) and
+    recurrent/XATTN state stay per-row: their footprint is already
+    bounded, so paging buys nothing there.
+    """
     def stack(spec_fn):
         one = spec_fn()
         return jax.tree.map(
@@ -342,18 +356,22 @@ def decode_state_spec(cfg: ModelConfig, batch: int, context_len: int,
     if cfg.num_repeats:
         state["blocks"] = {
             str(i): stack(functools.partial(
-                _block_state_spec, cfg, kind, batch, context_len, dtype))
+                _block_state_spec, cfg, kind, batch, context_len, dtype,
+                page_size, num_pages))
             for i, kind in enumerate(cfg.pattern)}
     if cfg.remainder:
         state["tail"] = {
-            str(i): _block_state_spec(cfg, kind, batch, context_len, dtype)
+            str(i): _block_state_spec(cfg, kind, batch, context_len, dtype,
+                                      page_size, num_pages)
             for i, kind in enumerate(cfg.remainder)}
     return state
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, context_len: int,
-                      dtype=jnp.bfloat16) -> dict:
-    spec = decode_state_spec(cfg, batch, context_len, dtype)
+                      dtype=jnp.bfloat16, page_size: Optional[int] = None,
+                      num_pages: Optional[int] = None) -> dict:
+    spec = decode_state_spec(cfg, batch, context_len, dtype, page_size,
+                             num_pages)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
 
@@ -385,10 +403,219 @@ def write_decode_slot(cfg: ModelConfig, state: dict, slot_state: dict,
     return out
 
 
+def _paged_leaf_write(dst: jax.Array, src: jax.Array, row_pages: jax.Array,
+                      start_page: jax.Array, page_size: int,
+                      page_axis: int) -> jax.Array:
+    """Scatter a B=1 flat cache leaf into the shared page pool.
+
+    ``dst`` has physical pages on ``page_axis``; ``src`` is the flat leaf
+    with its batch-1 axis at ``page_axis`` and the L_pad sequence right
+    after it, so merging that axis with a ``[n_log, page_size]`` split of
+    the sequence gives one update block per logical page — the whole row
+    lands in a single gather + scatter instead of a per-page
+    dynamic-update chain. Logical pages below ``start_page`` are *shared*
+    (copy-on-write prefix pages another owner may also read): their pool
+    content is rewritten with itself, so the write is a no-op there
+    without a traced-shape branch.
+    """
+    n_log = row_pages.shape[0]
+    seq_axis = page_axis + 1
+    shape = (src.shape[:page_axis] + (n_log, page_size)
+             + src.shape[seq_axis + 1:])
+    sp = src.reshape(shape).astype(dst.dtype)       # batch-1 axis -> pages
+    cur = jnp.take(dst, row_pages, axis=page_axis)
+    keep = jnp.arange(n_log, dtype=jnp.int32) >= start_page
+    kshape = ((1,) * page_axis + (n_log,)
+              + (1,) * (sp.ndim - page_axis - 1))
+    upd = jnp.where(keep.reshape(kshape), sp, cur)
+    if page_axis == 0:
+        return dst.at[row_pages].set(upd)
+    return dst.at[:, row_pages].set(upd)            # stacked repeat leads
+
+
+def write_paged_slot(cfg: ModelConfig, state: dict, slot_state: dict,
+                     index, row_pages: jax.Array, start_page,
+                     page_size: int) -> dict:
+    """Paged counterpart of ``write_decode_slot``: land a B=1 prefill
+    state into row ``index``, scattering full-context ATTN leaves into the
+    shared page pool through the row's page list.
+
+    ``row_pages`` [n_log] int32 maps logical page j -> physical page;
+    entries past the row's reservation point at the trash page (0), whose
+    content only trash reads see. ``start_page`` (traced scalar) is the
+    count of leading *shared* prefix pages: those already hold exactly the
+    prefill content being written, so they are skipped (copy-on-write —
+    the pool rows other owners read are never touched). Non-ATTN leaves
+    (windowed rings, recurrent state) write per-row exactly as
+    ``write_decode_slot`` does.
+    """
+    start_page = jnp.asarray(start_page, jnp.int32)
+
+    def _write_kind(kind: str, dst, src, axis: int):
+        if kind == ATTN:
+            return jax.tree.map(
+                lambda d, s: _paged_leaf_write(d, s, row_pages, start_page,
+                                               page_size, axis), dst, src)
+        return jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), index, axis=axis), dst, src)
+
+    out: dict[str, Any] = {}
+    if "blocks" in state:
+        out["blocks"] = {
+            str(i): _write_kind(kind, state["blocks"][str(i)],
+                                slot_state["blocks"][str(i)], 1)
+            for i, kind in enumerate(cfg.pattern)}
+    if "tail" in state:
+        out["tail"] = {
+            str(i): _write_kind(kind, state["tail"][str(i)],
+                                slot_state["tail"][str(i)], 0)
+            for i, kind in enumerate(cfg.remainder)}
+    return out
+
+
+def gather_paged_slot(cfg: ModelConfig, state: dict, index,
+                      row_pages: jax.Array, page_size: int) -> dict:
+    """Materialize row ``index`` of a paged decode state as a B=1 *flat*
+    state (the shape ``prefill_extend`` consumes): ATTN leaves gather the
+    row's page list into its logical [1, L_pad] cache view; other leaves
+    slice the row. Used on a prefix-cache hit — the gathered view holds
+    the shared prefix K/V, the suffix extends it, and ``write_paged_slot``
+    (start_page = shared count) scatters only the owned pages back.
+    """
+    n_log = row_pages.shape[0]
+
+    def _gather_kind(kind: str, leaf, axis: int):
+        if kind == ATTN:
+            def g(pool):
+                out = jnp.take(pool, row_pages, axis=axis)
+                shape = (pool.shape[:axis] + (1, n_log * page_size)
+                         + pool.shape[axis + 2:])
+                return out.reshape(shape)
+            return jax.tree.map(g, leaf)
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, index, 1, axis=axis),
+            leaf)
+
+    out: dict[str, Any] = {}
+    if "blocks" in state:
+        out["blocks"] = {
+            str(i): _gather_kind(kind, state["blocks"][str(i)], 1)
+            for i, kind in enumerate(cfg.pattern)}
+    if "tail" in state:
+        out["tail"] = {
+            str(i): _gather_kind(kind, state["tail"][str(i)], 0)
+            for i, kind in enumerate(cfg.remainder)}
+    return out
+
+
+def paged_window_view(cfg: ModelConfig, state: dict,
+                      pages: jax.Array) -> dict:
+    """Gather a paged decode state into the equivalent flat per-row view.
+
+    Full-context ATTN pool leaves ([..., P+1, ps, KV, dh]) become the
+    flat rings decode_step's non-paged path expects ([..., B, L_pad, KV,
+    dh], L_pad = n_log * page_size) by walking each row's page list;
+    every other leaf is already per-row and passes through untouched.
+    The page table is invariant inside a fused decode window, so doing
+    this ONCE per window — instead of re-gathering the pool inside every
+    scan step, as the paged attention path must — is what lets the paged
+    engine pay ~flat per-step cost; ``paged_window_scatter`` lands the
+    window's writes back in the pool afterwards.
+    """
+    B, n_log = pages.shape
+
+    def _gather_kind(kind: str, leaf, axis: int):
+        if kind != ATTN:
+            return leaf
+
+        def g(pool):
+            ps = pool.shape[axis + 1]
+            out = jnp.take(pool, pages, axis=axis)
+            shape = (pool.shape[:axis] + (B, n_log * ps)
+                     + pool.shape[axis + 2:])
+            return out.reshape(shape)
+        return jax.tree.map(g, leaf)
+
+    out: dict[str, Any] = {}
+    if "blocks" in state:
+        out["blocks"] = {
+            str(i): _gather_kind(kind, state["blocks"][str(i)], 1)
+            for i, kind in enumerate(cfg.pattern)}
+    if "tail" in state:
+        out["tail"] = {
+            str(i): _gather_kind(kind, state["tail"][str(i)], 0)
+            for i, kind in enumerate(cfg.remainder)}
+    return out
+
+
+def paged_window_scatter(cfg: ModelConfig, state: dict, flat: dict,
+                         pages: jax.Array, t0: jax.Array,
+                         steps: int) -> dict:
+    """Inverse of ``paged_window_view`` after a ``steps``-long window.
+
+    Decode positions ``t0[b] .. t0[b]+steps-1`` land in at most
+    ``1 + ceil((steps-1)/ps)`` consecutive logical pages per row, so only
+    those pages scatter back into the pool — everything else in the flat
+    view is byte-identical to what the gather read. Pages inside the
+    static bound that the window did not actually reach get identity
+    writes (their flat content IS the pool content), which is what keeps
+    shared copy-on-write prefix pages safe: a row's decode positions
+    start at its prompt end, past every fully-covered shared page, so
+    real writes only ever land in owned (or trash) pages. Rows whose
+    table is all trash (free slots) dogpile page 0 — undefined winner,
+    read by nobody. Non-ATTN leaves are per-row state the scan already
+    updated in place; they pass through from the flat tree.
+    """
+    B, n_log = pages.shape
+    t0 = jnp.asarray(t0, jnp.int32)
+    if t0.ndim == 0:
+        t0 = jnp.full((B,), t0)
+
+    def _scatter_kind(kind: str, pool_leaf, flat_leaf, axis: int):
+        if kind != ATTN:
+            return flat_leaf
+
+        def s(pool, fl):
+            ps = pool.shape[axis + 1]
+            L = n_log * ps
+            ntouch = min(n_log, 1 + (max(steps - 1, 0) + ps - 1) // ps)
+            j0 = (t0 % L) // ps
+            jj = (j0[:, None]
+                  + jnp.arange(ntouch, dtype=jnp.int32)[None, :]) % n_log
+            pid = jnp.take_along_axis(pages, jj, axis=1)        # [B, C]
+            shape = (fl.shape[:axis] + (B, n_log, ps)
+                     + fl.shape[axis + 2:])
+            fr = fl.reshape(shape)
+            bb = jnp.arange(B, dtype=jnp.int32)[:, None]
+            if axis == 0:
+                return pool.at[pid].set(fr[bb, jj].astype(pool.dtype))
+            return pool.at[:, pid].set(fr[:, bb, jj].astype(pool.dtype))
+        return jax.tree.map(s, pool_leaf, flat_leaf)
+
+    out: dict[str, Any] = {}
+    if "blocks" in state:
+        out["blocks"] = {
+            str(i): _scatter_kind(kind, state["blocks"][str(i)],
+                                  flat["blocks"][str(i)], 1)
+            for i, kind in enumerate(cfg.pattern)}
+    if "tail" in state:
+        out["tail"] = {
+            str(i): _scatter_kind(kind, state["tail"][str(i)],
+                                  flat["tail"][str(i)], 0)
+            for i, kind in enumerate(cfg.remainder)}
+    return out
+
+
 def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
-                  state: dict, t: jax.Array, attn_impl: str = "auto"):
+                  state: dict, t: jax.Array, attn_impl: str = "auto",
+                  pages: Optional[jax.Array] = None):
     h = layers.apply_norm(cfg, p["norm"], x)
-    if kind in (ATTN, SWA, LOCAL):
+    if kind == ATTN and pages is not None:
+        h, state = attention.paged_decode_attention(cfg, p["attn"], h,
+                                                    state, t, pages,
+                                                    impl=attn_impl)
+    elif kind in (ATTN, SWA, LOCAL):
         h, state = attention.decode_attention(cfg, p["attn"], h, state, t,
                                               kind, impl=attn_impl)
     elif kind == XATTN:
@@ -417,7 +644,8 @@ def _decode_block(cfg: ModelConfig, kind: str, p: dict, x: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: dict, state: dict,
-                tokens: jax.Array, t: jax.Array, attn_impl: str = "auto"):
+                tokens: jax.Array, t: jax.Array, attn_impl: str = "auto",
+                pages: Optional[jax.Array] = None):
     """One decode step. tokens [B,1] int32; t = absolute position — scalar
     (lockstep batch) or ``[B]`` vector (continuous batching / ragged rows,
     each cache row at its own position).
@@ -425,7 +653,11 @@ def decode_step(cfg: ModelConfig, params: dict, state: dict,
     ``attn_impl`` ("auto" | "dense" | "flash") picks the attention leaf
     for every ATTN/SWA/LOCAL block (see attention.decode_attention); it
     is static config resolved at trace time, so executable caches must
-    key on it. Returns (logits [B,1,V], new_state).
+    key on it. With ``pages`` ([B, n_log] int32 page table), full-context
+    ATTN layers read their state as a shared page pool (see
+    ``decode_state_spec``'s paged mode) — the table is loop-invariant
+    across the repeat scan, so it rides in by closure, not as a carry.
+    Returns (logits [B,1,V], new_state).
     """
     x = layers.embed_tokens(cfg, params["embed"], tokens)
     x = shard(x, "dp", None, None)
@@ -437,7 +669,8 @@ def decode_step(cfg: ModelConfig, params: dict, state: dict,
             new_blk_state = {}
             for i, kind in enumerate(cfg.pattern):
                 h, s = _decode_block(cfg, kind, blk_params[str(i)], h,
-                                     blk_state[str(i)], t, attn_impl)
+                                     blk_state[str(i)], t, attn_impl,
+                                     pages)
                 new_blk_state[str(i)] = s
             return h, new_blk_state
         x, new_state["blocks"] = _repeat_blocks(
@@ -447,7 +680,8 @@ def decode_step(cfg: ModelConfig, params: dict, state: dict,
         new_state["tail"] = {}
         for i, kind in enumerate(cfg.remainder):
             x, s = _decode_block(cfg, kind, params["tail"][str(i)], x,
-                                 state["tail"][str(i)], t, attn_impl)
+                                 state["tail"][str(i)], t, attn_impl,
+                                 pages)
             new_state["tail"][str(i)] = s
 
     x = layers.apply_norm(cfg, params["final_norm"], x)

@@ -81,7 +81,26 @@ def make_fused_serve_step(cfg: ModelConfig, steps: int,
     """
     sampler = make_sampler(temperature, top_k)
 
-    def fused(params, state, tokens, t, key=None):
+    def fused(params, state, tokens, t, key=None, pages=None):
+        # ``pages`` (paged KV mode) is read-only inside the window — a
+        # loop invariant. Threading it into every scan step makes the
+        # paged attention path walk the whole working KV through the
+        # page table once per step per layer; for multi-step windows the
+        # pool is instead materialized as the equivalent flat per-row
+        # view ONCE here, the scan runs the flat step body
+        # (bit-identical math — the paged oracle is gather + this same
+        # computation), and the <= 2 pages per row the window's slots
+        # cover scatter back at the end: one pool walk per window
+        # instead of ``steps``. A K=1 window (drain tails,
+        # sync_every=1) keeps the direct paged step — the view would
+        # cost two pool copies for a single token, and the direct path
+        # is the one the paged flash-decode kernel serves on TPU.
+        use_view = pages is not None and steps > 1
+        pool_state, t0 = state, t
+        if use_view:
+            state = transformer.paged_window_view(cfg, state, pages)
+        step_pages = None if use_view else pages
+
         def body(carry, _):
             state, tok, t, key = carry
             if key is not None:
@@ -89,12 +108,16 @@ def make_fused_serve_step(cfg: ModelConfig, steps: int,
             else:
                 sub = None
             logits, state = transformer.decode_step(cfg, params, state, tok,
-                                                    t, attn_impl=attn_impl)
+                                                    t, attn_impl=attn_impl,
+                                                    pages=step_pages)
             nxt = sampler(logits, sub)
             return (state, nxt, t + 1, key), nxt[:, 0]
 
         (state, tok, t, key), toks = jax.lax.scan(
             body, (state, tokens, t, key), None, length=steps)
+        if use_view:
+            state = transformer.paged_window_scatter(cfg, pool_state, state,
+                                                     pages, t0, steps)
         return jnp.moveaxis(toks, 0, 1), state, tok, t, key
 
     return fused

@@ -53,6 +53,29 @@ ever fit (prompt + max_new > context_len) fail their own future at
 submit time — they never poison a step, and the queue keeps serving
 everyone else. A full pool queues requests (FCFS) instead of erroring.
 
+Paged KV mode (``page_size`` set): full-context ATTN layers swap their
+flat ``[num_slots, L]`` rings for a shared pool of ``num_pages``
+fixed-size pages plus a host-resident ``[num_slots, n_log]`` page table
+(mutated freely on admission/retirement, re-uploaded — a few hundred
+bytes — once per fused window),
+so a row's cache footprint is ``ceil((prompt+max_new)/page_size)``
+pages instead of a full max-L ring and the concurrency limit is total
+*pages*, not rows × max_L. Admission reserves a row's whole page budget
+up front (deadlock-free: a decode window can never run out mid-flight —
+"appending a page on a boundary crossing" is the pre-assigned page-table
+entry coming live as ``t`` crosses it), retirement refcount-releases the
+pages and re-points the row's table entries at the trash page (physical
+page 0), where free rows' and speculative post-retirement writes land
+harmlessly. On top of paging, a refcounted prefix cache
+(``serve.paging.PrefixCache``) lets a prompt sharing a cached
+page-aligned prefix skip that prefix's prefill: its leading page-table
+entries alias the shared pages (copy-on-write by construction — shared
+pages are fully prompt-covered, and decode writes start at the prompt
+end) and only the suffix runs through ``prefill_extend``. Windowed
+(SWA/local) rings and recurrent state stay per-row — already
+footprint-bounded — which also scopes the prefix cache to causal
+attention-only stacks.
+
 MoE caveat: expert routing under a capacity factor couples rows through
 the shared capacity budget, so MoE decode in a shared pool is not
 bit-identical to serving the same request alone (dense / recurrent
@@ -105,6 +128,7 @@ class _PendingPrefill:
     slot: int
     state: Any                    # B=1 decode state (chunk-extended)
     consumed: int                 # prompt tokens already prefilled
+    start_page: int = 0           # leading shared prefix pages (paged mode)
 
 
 class ServeEngine:
@@ -122,7 +146,10 @@ class ServeEngine:
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  seed: int = 0, sync_every: int = 8,
                  top_k: Optional[int] = None, decode_impl: str = "auto",
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = True):
         import jax
         import jax.numpy as jnp
         from repro.models import transformer
@@ -137,6 +164,8 @@ class ServeEngine:
         if decode_impl not in ("auto", "dense", "flash"):
             raise ValueError(f"decode_impl must be auto|dense|flash, "
                              f"got {decode_impl!r}")
+        if page_size is not None and page_size < 1:
+            raise ValueError("page_size must be >= 1")
         self._cfg = cfg
         self._params = params
         self._ns = num_slots
@@ -150,13 +179,46 @@ class ServeEngine:
         self._key = jax.random.key(seed) if temperature else None
 
         kinds = set(cfg.pattern) | set(cfg.remainder)
+        # Paged KV pool geometry. The internal ring modulus is context_len
+        # rounded UP to whole pages (L_pad): submit() still rejects
+        # prompt+max_new > context_len, so positions never wrap for any
+        # modulus >= context_len and the ring-validity math is unchanged.
+        # Stacks with no full-context ATTN layer (pure windowed/recurrent)
+        # have nothing to page — they accept the knobs but run the flat
+        # per-row layout with an unlimited "pool".
+        self._paged = page_size is not None
+        if self._paged:
+            self._ps = int(page_size)
+            self._n_log = -(-context_len // self._ps)
+            self._Lp = self._n_log * self._ps
+            self._has_paged = "attn" in kinds
+            self._P = (int(num_pages) if num_pages is not None
+                       else num_slots * self._n_log)
+            if self._has_paged and self._P < self._n_log:
+                # Not fatal — short requests still fit — but a max-size
+                # request can never be admitted; submit() rejects per-request.
+                pass
+        else:
+            self._ps = 0
+            self._Lp = context_len
+            self._has_paged = False
+        # Compact windows: with every cache leaf behind the page table
+        # (attention-only stack), the fused window's batch width is a free
+        # choice — the executable sees [W] page-table rows, tokens and
+        # positions, never the pool's row count — so windows run at the
+        # ACTIVE row count (padded up to a compiled width) and idle slots
+        # cost nothing. The flat ring cannot do this without physically
+        # compacting KV rows, which is the structural reason extra paged
+        # admission capacity is ~free. Stacks with per-row state leaves
+        # (SWA rings, recurrent, conv) keep full-width windows.
+        self._compact = self._has_paged and kinds == {"attn"}
         self._chunk = prefill_chunk
         self._can_chunk = (prefill_chunk is not None
                            and kinds <= _CHUNKABLE_KINDS
                            and not cfg.conv_pos)
         if prefill_chunk is not None:
-            ring = min((min(context_len, cfg.window or context_len)
-                        if k in ("swa", "local") else context_len)
+            ring = min((min(self._Lp, cfg.window or self._Lp)
+                        if k in ("swa", "local") else self._Lp)
                        for k in kinds)
             if not 1 <= prefill_chunk <= ring:
                 raise ValueError(
@@ -164,8 +226,32 @@ class ServeEngine:
                     f"{ring}] (the smallest cache ring) — a larger chunk "
                     "would overwrite slots its own queries still attend to")
 
-        self._state = transformer.init_decode_state(cfg, num_slots,
-                                                    context_len)
+        if self._has_paged:
+            # Physical pool is P usable pages + the trash page (id 0).
+            self._state = transformer.init_decode_state(
+                cfg, num_slots, self._Lp, page_size=self._ps,
+                num_pages=self._P + 1)
+            # The page table lives on HOST (tiny int32 [ns, n_log]): it
+            # mutates on every admission/retirement, and host writes are
+            # free where device .at[] updates were one jit call each; the
+            # fused window re-uploads the ~KB table once per window.
+            self._pages_tab = np.zeros((num_slots, self._n_log), np.int32)
+            self._free_pages: list[int] = list(range(self._P, 0, -1))
+            self._page_rc: list[int] = [0] * (self._P + 1)
+            self._row_pages: list[Optional[list[int]]] = [None] * num_slots
+            self._ppr_ewma = 0.0            # pages per admitted request
+            prefix_ok = (prefix_cache and cfg.causal and not cfg.conv_pos
+                         and kinds <= {"attn"})
+            if prefix_ok:
+                from repro.serve.paging import PrefixCache
+                self._prefix: Optional[PrefixCache] = PrefixCache(self._ps)
+            else:
+                self._prefix = None
+        else:
+            self._state = transformer.init_decode_state(cfg, num_slots,
+                                                        self._Lp)
+            self._pages_tab = None
+            self._prefix = None
         self._slots: list[Optional[_Slot]] = [None] * num_slots
         self._free: list[int] = list(range(num_slots - 1, -1, -1))
         # Device-resident hot state: the feed tokens and per-row positions
@@ -183,9 +269,11 @@ class ServeEngine:
             top_k=top_k, attn_impl=decode_impl)
         self._sampler = jax.jit(serve_lib.make_sampler(temperature, top_k))
 
+        Lp = self._Lp
+
         def _prefill_fn(params, tokens, key=None):
             logits, state = transformer.prefill(cfg, params, tokens=tokens,
-                                                context_len=context_len)
+                                                context_len=Lp)
             nxt = serve_lib.make_sampler(temperature, top_k)(
                 logits[:, -1:], key)
             return nxt, state
@@ -198,6 +286,19 @@ class ServeEngine:
         self._write = jax.jit(
             functools.partial(transformer.write_decode_slot, cfg),
             donate_argnums=(0,))
+        if self._has_paged:
+            ps = self._ps
+
+            def _write_paged_fn(state, slot_state, i, row_pages,
+                                start_page):
+                return transformer.write_paged_slot(
+                    cfg, state, slot_state, i, row_pages, start_page, ps)
+
+            self._write_paged = jax.jit(_write_paged_fn,
+                                        donate_argnums=(0,))
+            self._gather = jax.jit(
+                lambda state, i, row_pages: transformer.gather_paged_slot(
+                    cfg, state, i, row_pages, ps))
 
         def _row_write_fn(tokens, t, i, tok, tval):
             return tokens.at[i, 0].set(tok), t.at[i].set(tval)
@@ -215,7 +316,7 @@ class ServeEngine:
         self._counters = dict(submitted=0, admitted=0, retired=0, failed=0,
                               steps=0, decode_tokens=0, generated_tokens=0,
                               occupancy_sum=0, peak_occupancy=0,
-                              host_syncs=0)
+                              host_syncs=0, prefix_tokens_reused=0)
         # EWMA decode-step microseconds per token: the routing signal a
         # load balancer uses to weigh this engine against its siblings.
         self._ewma_us_tok = 0.0
@@ -240,6 +341,11 @@ class ServeEngine:
                 f"prompt ({prompt.size}) + max_new ({mn}) exceeds the "
                 f"engine's context_len ({self._L})"))
             return fut
+        if self._has_paged and self._page_need(prompt.size, mn) > self._P:
+            fut.set_exception(ValueError(
+                f"request needs {self._page_need(prompt.size, mn)} KV "
+                f"pages; the pool only has {self._P}"))
+            return fut
         with self._lock:
             # The put happens under the same lock stop() takes before
             # draining, so a request can never slip into the queue after
@@ -252,17 +358,74 @@ class ServeEngine:
         self._wake.set()
         return fut
 
+    # -- page accounting (paged mode, engine thread only) --------------------
+    def _page_need(self, prompt_len: int, max_new: int) -> int:
+        total = min(prompt_len + max_new, self._Lp)
+        return -(-total // self._ps)
+
+    def _incref(self, pid: int) -> None:
+        self._page_rc[pid] += 1
+
+    def _decref(self, pid: int) -> None:
+        self._page_rc[pid] -= 1
+        if self._page_rc[pid] == 0:
+            self._free_pages.append(pid)
+
+    def _alloc_pages(self, n: int) -> Optional[list[int]]:
+        """Take ``n`` pages off the free list (each born with refcount 1),
+        evicting refcount-zero-able prefix-cache entries LRU-first under
+        pressure. None = the pool genuinely cannot satisfy ``n`` right now
+        (admission blocks FCFS until retirements release pages)."""
+        while len(self._free_pages) < n:
+            if self._prefix is None or not self._prefix.evict_one(self._decref):
+                return None
+        out = [self._free_pages.pop() for _ in range(n)]
+        for pid in out:
+            self._page_rc[pid] = 1
+        return out
+
+    def _release_pages(self, pages: Optional[list[int]]) -> None:
+        if pages:
+            for pid in pages:
+                self._decref(pid)
+
+    def _pages_arr(self, row_pages: list[int]):
+        """Row page list padded to the full logical length with trash-page
+        entries (speculative writes past the reservation land there).
+        Host numpy: it feeds both the host page table and jit operands
+        (converted at the call boundary)."""
+        pad = [0] * (self._n_log - len(row_pages))
+        return np.asarray(row_pages + pad, np.int32)
+
+    def _register_prefix(self, prompt: np.ndarray,
+                         row_pages: list[int]) -> None:
+        if self._prefix is not None:
+            self._prefix.insert(prompt, row_pages, self._incref,
+                                self._decref)
+
+    def _window_width(self, n: int) -> int:
+        """Compact-window batch width for ``n`` active rows: the smallest
+        power-of-two >= n, capped at ``num_slots`` — so at most
+        log2(num_slots)+2 width shapes ever compile per window length."""
+        w = 1
+        while w < n and w < self._ns:
+            w *= 2
+        return min(w, self._ns)
+
     # -- engine side ---------------------------------------------------------
     def _activate(self, req: _Request, i: int, first: int) -> None:
         """Mark slot ``i`` live: host bookkeeping + the device-resident
         feed-token/position rows (one donated row write, no full-array
-        host->device rebuild)."""
+        host->device rebuild). Compact-window engines skip the device
+        write: their windows rebuild the [W] feed operands from host slot
+        state anyway, so the per-admission jit call would be pure tax."""
         import jax.numpy as jnp
         self._slots[i] = _Slot(request=req, t=len(req.prompt),
                                generated=[first])
-        self._tokens_dev, self._t_dev = self._row_write(
-            self._tokens_dev, self._t_dev, jnp.int32(i), jnp.int32(first),
-            jnp.int32(len(req.prompt)))
+        if not self._compact:
+            self._tokens_dev, self._t_dev = self._row_write(
+                self._tokens_dev, self._t_dev, jnp.int32(i), jnp.int32(first),
+                jnp.int32(len(req.prompt)))
         with self._lock:
             self._counters["admitted"] += 1
             self._counters["host_syncs"] += 1   # the first-token pull
@@ -277,7 +440,15 @@ class ServeEngine:
         parked as a _PendingPrefill instead and stream through
         ``_advance_chunk`` one chunk per step; admission order stays
         strict FCFS, so later arrivals wait behind an in-flight chunked
-        prefill rather than jumping it."""
+        prefill rather than jumping it.
+
+        Paged mode reserves the row's whole page budget here (shared
+        prefix pages + freshly allocated owned pages); a pool that cannot
+        satisfy the head request blocks admission (FCFS) until
+        retirements — or prefix-cache eviction — free pages. On a prefix
+        hit the shared pages are gathered into a flat B=1 view and only
+        the prompt *suffix* runs through ``prefill_extend``; the
+        copy-on-write scatter then lands just the owned pages."""
         import jax.numpy as jnp
         while True:
             try:
@@ -289,29 +460,76 @@ class ServeEngine:
             chunked = self._can_chunk and len(req.prompt) > self._chunk
             if chunked and self._pending is not None:
                 return                          # FCFS: wait for the pending
+            shared: list[int] = []
+            row_pages: Optional[list[int]] = None
+            if self._has_paged:
+                n_need = self._page_need(len(req.prompt), req.max_new)
+                if self._prefix is not None:
+                    shared = self._prefix.lookup(req.prompt)
+                owned = self._alloc_pages(n_need - len(shared))
+                if owned is None:
+                    return      # pool exhausted: FCFS-block at the head
+                for pid in shared:
+                    self._incref(pid)
+                row_pages = shared + owned
             self._ready.popleft()
             if not req.future.set_running_or_notify_cancel():
+                self._release_pages(row_pages)
                 continue                                    # cancelled
             i = self._free.pop()
+            c = len(shared)
+            if self._has_paged:
+                self._row_pages[i] = row_pages
+                self._ppr_ewma = (float(len(row_pages))
+                                  if self._ppr_ewma == 0.0 else
+                                  0.2 * len(row_pages) + 0.8 * self._ppr_ewma)
+                if c:
+                    with self._lock:
+                        self._counters["prefix_tokens_reused"] += c * self._ps
             if chunked:
                 from repro.models import transformer
+                if c:
+                    state = self._gather(self._state, jnp.int32(i),
+                                         self._pages_arr(row_pages))
+                else:
+                    state = transformer.init_decode_state(self._cfg, 1,
+                                                          self._Lp)
                 self._pending = _PendingPrefill(
-                    request=req, slot=i,
-                    state=transformer.init_decode_state(self._cfg, 1,
-                                                        self._L),
-                    consumed=0)
+                    request=req, slot=i, state=state,
+                    consumed=c * self._ps, start_page=c)
                 continue
             try:
                 key = self._split_key()
-                nxt, slot_state = self._prefill(
-                    self._params, jnp.asarray(req.prompt[None]), key)
-                self._state = self._write(self._state, slot_state,
-                                          jnp.int32(i))
+                if c:
+                    flat = self._gather(self._state, jnp.int32(i),
+                                        self._pages_arr(row_pages))
+                    logits, slot_state = self._extend(
+                        self._params, flat,
+                        jnp.asarray(req.prompt[None, c * self._ps:]),
+                        jnp.int32(c * self._ps))
+                    nxt = self._sampler(logits, key)
+                else:
+                    nxt, slot_state = self._prefill(
+                        self._params, jnp.asarray(req.prompt[None]), key)
+                if self._has_paged:
+                    arr = self._pages_arr(row_pages)
+                    self._state = self._write_paged(
+                        self._state, slot_state, jnp.int32(i), arr,
+                        jnp.int32(c))
+                    self._pages_tab[i] = arr
+                    self._register_prefix(req.prompt, row_pages)
+                else:
+                    self._state = self._write(self._state, slot_state,
+                                              jnp.int32(i))
                 first = int(np.asarray(nxt)[0, 0])
             except Exception as exc:                        # noqa: BLE001
                 # Per-request failure delivery: the slot goes straight back
                 # and the step proceeds for everyone else.
                 self._free.append(i)
+                if self._has_paged:
+                    self._release_pages(self._row_pages[i])
+                    self._row_pages[i] = None
+                    self._pages_tab[i] = 0
                 with self._lock:
                     self._counters["failed"] += 1
                 req.future.set_exception(exc)
@@ -339,10 +557,23 @@ class ServeEngine:
                 return True
             nxt = self._sampler(logits, self._split_key())
             first = int(np.asarray(nxt)[0, 0])
-            self._state = self._write(self._state, p.state,
-                                      jnp.int32(p.slot))
+            if self._has_paged:
+                rp = self._row_pages[p.slot]
+                arr = self._pages_arr(rp)
+                self._state = self._write_paged(
+                    self._state, p.state, jnp.int32(p.slot), arr,
+                    jnp.int32(p.start_page))
+                self._pages_tab[p.slot] = arr
+                self._register_prefix(p.request.prompt, rp)
+            else:
+                self._state = self._write(self._state, p.state,
+                                          jnp.int32(p.slot))
         except Exception as exc:                            # noqa: BLE001
             self._free.append(p.slot)
+            if self._has_paged:
+                self._release_pages(self._row_pages[p.slot])
+                self._row_pages[p.slot] = None
+                self._pages_tab[p.slot] = 0
             self._pending = None
             with self._lock:
                 self._counters["failed"] += 1
@@ -398,9 +629,37 @@ class ServeEngine:
                 best, k_eff = score, k
             k = min(k * 2, self._sync) if k < self._sync else k * 2
         t0 = time.perf_counter()
-        toks, self._state, self._tokens_dev, self._t_dev, key = \
-            self._fused(k_eff)(self._params, self._state, self._tokens_dev,
-                               self._t_dev, self._key)
+        row_of = None
+        if self._compact:
+            # Window width = active count padded up to a compiled ladder
+            # width: the executable reads [W] page-table rows / feed
+            # tokens / positions, never the slot count, so idle capacity
+            # rows cost zero compute. Pad rows carry an all-trash table
+            # and t=0 (all-invalid attention -> zeros); their writes land
+            # in the trash page. The feed operands rebuild from host slot
+            # state — a few dozen bytes per window.
+            W = self._window_width(len(active))
+            toks_w = np.zeros((W, 1), np.int32)
+            t_w = np.zeros((W,), np.int32)
+            pages_w = np.zeros((W, self._n_log), np.int32)
+            for w, i in enumerate(active):
+                s = self._slots[i]
+                toks_w[w, 0] = s.generated[-1]
+                t_w[w] = s.t
+                pages_w[w] = self._pages_tab[i]
+            toks, self._state, _, _, key = \
+                self._fused(k_eff)(self._params, self._state, toks_w, t_w,
+                                   self._key, pages_w)
+            row_of = {i: w for w, i in enumerate(active)}
+        elif self._has_paged:
+            toks, self._state, self._tokens_dev, self._t_dev, key = \
+                self._fused(k_eff)(self._params, self._state,
+                                   self._tokens_dev, self._t_dev, self._key,
+                                   self._pages_tab)
+        else:
+            toks, self._state, self._tokens_dev, self._t_dev, key = \
+                self._fused(k_eff)(self._params, self._state,
+                                   self._tokens_dev, self._t_dev, self._key)
         if self._key is not None:
             self._key = key
         toks = np.asarray(toks)           # ONE host sync per K-token window
@@ -421,7 +680,7 @@ class ServeEngine:
             # window and are simply dropped (the ring rows they touched are
             # rewritten on the slot's next admission).
             for j in range(k_eff):
-                tok = int(toks[i, j])
+                tok = int(toks[row_of[i] if row_of is not None else i, j])
                 slot.generated.append(tok)
                 slot.t += 1
                 if (self._eos is not None and tok == self._eos) \
@@ -434,6 +693,14 @@ class ServeEngine:
         slot = self._slots[i]
         self._slots[i] = None
         self._free.append(i)
+        if self._has_paged and self._row_pages[i] is not None:
+            # Release the refs and re-point the row at the trash page: the
+            # freed row keeps riding the fused window until reused, and its
+            # speculative writes must not corrupt reallocated pages. The
+            # table is host numpy, so this is a free write, not a jit call.
+            self._release_pages(self._row_pages[i])
+            self._row_pages[i] = None
+            self._pages_tab[i] = 0
         out = np.concatenate([slot.request.prompt,
                               np.asarray(slot.generated, np.int32)])
         with self._lock:
@@ -444,23 +711,60 @@ class ServeEngine:
     # -- lifecycle -----------------------------------------------------------
     def warmup(self) -> "ServeEngine":
         """Compile every fused-window executable this engine can select
-        (the power-of-two K ladder up to ``sync_every``) against throwaway
-        state, so no window compiles mid-serving. Prompt-length prefill
-        shapes still compile on first sight — warm those by submitting
-        representative prompts."""
+        (the power-of-two K ladder up to ``sync_every`` — the *paged*
+        ladder when paging is on, with the page table threaded as a real
+        operand) plus, with ``prefill_chunk`` set, the chunk-shaped
+        ``prefill_extend`` executable, all against throwaway state, so
+        nothing compiles mid-serving. Prompt-length prefill shapes still
+        compile on first sight — warm those by submitting representative
+        prompts."""
         import jax
         import jax.numpy as jnp
         from repro.models import transformer
-        state = transformer.init_decode_state(self._cfg, self._ns, self._L)
-        toks = jnp.zeros((self._ns, 1), jnp.int32)
-        t = jnp.zeros((self._ns,), jnp.int32)
-        key = None if self._key is None else jax.random.key(0)
-        k = 1
-        while k <= self._sync:
-            out = self._fused(k)(self._params, state, toks, t, key)
-            _, state, toks, t, key = out
-            jax.block_until_ready(out)
-            k = min(k * 2, self._sync) if k < self._sync else k * 2
+        if self._has_paged:
+            state = transformer.init_decode_state(
+                self._cfg, self._ns, self._Lp, page_size=self._ps,
+                num_pages=self._P + 1)
+            # Compact engines pick a window width per window (the
+            # power-of-two ladder up to num_slots), so warm the whole
+            # width x K grid — a mid-run width change must not stall
+            # serving on a compile.
+            widths = []
+            if self._compact:
+                w = 1
+                while w < self._ns:
+                    widths.append(w)
+                    w *= 2
+            widths.append(self._ns)
+            for width in widths:
+                pages = jnp.zeros((width, self._n_log), jnp.int32)
+                k = 1
+                while k <= self._sync:
+                    toks = jnp.zeros((width, 1), jnp.int32)
+                    t = jnp.zeros((width,), jnp.int32)
+                    key = None if self._key is None else jax.random.key(0)
+                    out = self._fused(k)(self._params, state, toks, t, key,
+                                         pages)
+                    state = out[1]
+                    jax.block_until_ready(out)
+                    k = min(k * 2, self._sync) if k < self._sync else k * 2
+        else:
+            state = transformer.init_decode_state(self._cfg, self._ns,
+                                                  self._Lp)
+            toks = jnp.zeros((self._ns, 1), jnp.int32)
+            t = jnp.zeros((self._ns,), jnp.int32)
+            key = None if self._key is None else jax.random.key(0)
+            k = 1
+            while k <= self._sync:
+                out = self._fused(k)(self._params, state, toks, t, key)
+                _, state, toks, t, key = out
+                jax.block_until_ready(out)
+                k = min(k * 2, self._sync) if k < self._sync else k * 2
+        if self._can_chunk:
+            st1 = transformer.init_decode_state(self._cfg, 1, self._Lp)
+            chunk = jnp.zeros((1, self._chunk), jnp.int32)
+            logits, _ = self._extend(self._params, st1, chunk, jnp.int32(0))
+            jax.block_until_ready(logits)
         return self
 
     def start(self) -> "ServeEngine":
@@ -500,12 +804,20 @@ class ServeEngine:
         if self._pending is not None:
             p, self._pending = self._pending, None
             self._free.append(p.slot)
+            if self._has_paged:
+                self._release_pages(self._row_pages[p.slot])
+                self._row_pages[p.slot] = None
             p.request.future.set_exception(err)
         for i, slot in enumerate(self._slots):
             if slot is not None:
                 self._slots[i] = None
                 self._free.append(i)
+                if self._has_paged:
+                    self._release_pages(self._row_pages[i])
+                    self._row_pages[i] = None
                 slot.request.future.set_exception(err)
+        if self._prefix is not None:
+            self._prefix.clear(self._decref)
 
     def __enter__(self) -> "ServeEngine":
         return self.start()
@@ -541,15 +853,31 @@ class ServeEngine:
                                if s["steps"] else 0.0)
         s["syncs_per_token"] = (s["host_syncs"] / s["generated_tokens"]
                                 if s["generated_tokens"] else 0.0)
+        if self._has_paged:
+            s["pages_total"] = self._P
+            s["pages_free"] = len(self._free_pages)
+            s["pages_in_use"] = self._P - len(self._free_pages)
+            s["pages_per_request_ewma"] = self._ppr_ewma
+            if self._prefix is not None:
+                s["prefix_cache"] = self._prefix.stats()
         return s
 
     def load(self) -> dict:
         """Cheap load report (the routing signal a fabric router uses):
-        free KV slots, queued requests, and EWMA decode us/token. Safe
+        free KV slots, queued requests, EWMA decode us/token and — in
+        paged mode — free pages / expected pages-per-request, so a router
+        can score admission headroom in *pages* rather than rows. Safe
         from any thread, no full counter copy."""
         with self._lock:
             ewma = self._ewma_us_tok
             free = len(self._free)
-        return {"num_slots": self._ns, "free_slots": free,
-                "queue_depth": self._queue.qsize() + len(self._ready),
-                "ewma_us_per_token": ewma}
+        out = {"num_slots": self._ns, "free_slots": free,
+               "queue_depth": self._queue.qsize() + len(self._ready),
+               "ewma_us_per_token": ewma}
+        if self._has_paged:
+            out["pages_total"] = self._P
+            out["free_pages"] = len(self._free_pages)
+            out["pages_per_request_ewma"] = self._ppr_ewma
+            out["prefix_hit_rate"] = (self._prefix.stats()["hit_rate"]
+                                      if self._prefix is not None else 0.0)
+        return out

@@ -19,7 +19,25 @@ the router moves at runtime:
     depth − its reported free slots; the freshest signal (our own
     in-flight deltas) dominates between heartbeats, ties break
     round-robin. Requests never pin to a replica: two requests from one
-    client may land on two engines.
+    client may land on two engines. A replica serving a *paged* engine
+    reports free pages and expected pages-per-request alongside free
+    slots, and the score caps admission headroom at
+    ``free_pages / pages_per_request`` — a replica with idle rows but a
+    drained page pool stops looking attractive.
+  * **Coalesced dispatch** (``coalesce=True``, the default): ``submit``
+    does not send its own RPC. It parks the call on a pending queue and
+    a single dispatcher thread drains the queue, packing every call
+    bound for the same replica into ONE courier ``batch_call`` frame
+    and fanning the per-call results back out to the callers' futures.
+    The flush policy is adaptive, not timed: an idle dispatcher flushes
+    a lone arrival immediately (no added latency), and while it is busy
+    sending one frame the next arrivals pile up behind it and leave as
+    one frame — under load, frames form exactly as fast as the
+    transport can carry them. Per-frame cost (serialize + send) is paid
+    once per frame instead of once per call; failure semantics are
+    unchanged because a frame-level transport error fans out to every
+    caller and feeds the same failover classification as a per-call
+    error.
   * **Failover**: a dispatch that dies with a *replica* error (transport
     failure, stopped engine) is retried on a sibling — bounded by
     ``max_retries`` — and the failed replica is evicted from the
@@ -47,6 +65,7 @@ the cross-router signal).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
@@ -111,9 +130,17 @@ class _Replica:
     def score(self) -> float:
         # Local in-flight is exact and fresh; the reported queue/free pair
         # is at most one heartbeat old and carries other routers' traffic.
+        # A paged engine's row count overstates its headroom when the page
+        # pool is the binding constraint: cap "free" at the number of
+        # expected-size requests the remaining pages can hold.
+        free = float(self.load.get("free_slots", 0))
+        if "free_pages" in self.load:
+            ppr = max(float(self.load.get("pages_per_request_ewma") or 0.0),
+                      1.0)
+            free = min(free, float(self.load.get("free_pages", 0)) / ppr)
         return (self.inflight
                 + float(self.load.get("queue_depth", 0))
-                - float(self.load.get("free_slots", 0)))
+                - free)
 
 
 class Router:
@@ -129,6 +156,7 @@ class Router:
                  max_retries: int = 2, queue_slack: Optional[int] = None,
                  startup_wait_s: float = 15.0,
                  request_timeout_s: float = 120.0,
+                 coalesce: bool = True,
                  client_factory: Optional[Callable[[str], Any]] = None):
         self._registry = registry
         self._refresh_s = refresh_s
@@ -136,6 +164,7 @@ class Router:
         self._queue_slack = queue_slack
         self._startup_wait = startup_wait_s
         self._timeout = request_timeout_s
+        self._coalesce = coalesce
         self._client_factory = client_factory or courier.client_for
 
         self._lock = threading.Lock()
@@ -146,8 +175,21 @@ class Router:
         self._ctx_stop = get_current_context().stop_event
         self._counters = dict(submitted=0, completed=0, retries=0,
                               failovers=0, overloaded=0, request_errors=0,
-                              refreshes=0, dispatches=0, dispatch_us_sum=0.0)
+                              refreshes=0, dispatches=0, frames=0,
+                              coalesced_calls=0, dispatch_us_sum=0.0)
         self._first_failover_done_s: Optional[float] = None
+
+        # Coalesced-dispatch state: (replica, call, caller future) triples
+        # park here until the dispatcher thread drains them into
+        # per-replica batch_call frames.
+        self._pending_cv = threading.Condition(self._lock)
+        self._pending_calls: collections.deque = collections.deque()
+        self._dispatcher: Optional[threading.Thread] = None
+        if coalesce:
+            self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                                daemon=True,
+                                                name="router-dispatch")
+            self._dispatcher.start()
 
         self._refresh()                            # best-effort initial view
         self._thread = threading.Thread(target=self._refresh_loop,
@@ -281,6 +323,82 @@ class Router:
         if drained:
             self._close_client(rep)
 
+    # -- coalesced dispatch --------------------------------------------------
+    def _enqueue(self, rep: _Replica, method: str, args: tuple,
+                 kwargs: dict) -> cf.Future:
+        """Park one call for the dispatcher; returns the caller's future.
+        The dispatcher packs every call bound for the same replica that is
+        pending at drain time into one ``batch_call`` frame."""
+        fut: cf.Future = cf.Future()
+        with self._pending_cv:
+            self._pending_calls.append((rep, (method, args, kwargs), fut))
+            self._pending_cv.notify()
+        return fut
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            with self._pending_cv:
+                while (not self._pending_calls
+                       and not (self._closed.is_set()
+                                or self._ctx_stop.is_set())):
+                    self._pending_cv.wait(timeout=0.5)
+                items = list(self._pending_calls)
+                self._pending_calls.clear()
+                stopping = self._closed.is_set() or self._ctx_stop.is_set()
+            if stopping and not items:
+                return
+            # Group by replica identity: one frame per replica per drain.
+            # Anything that arrived while the previous frames were being
+            # serialized/sent leaves in the NEXT drain — that lag is the
+            # whole coalescing window, so an idle router adds no latency.
+            groups: dict[int, tuple[_Replica, list, list]] = {}
+            for rep, call, fut in items:
+                key = id(rep)
+                if key not in groups:
+                    groups[key] = (rep, [], [])
+                groups[key][1].append(call)
+                groups[key][2].append(fut)
+            for rep, calls, futs in groups.values():
+                self._send_frame(rep, calls, futs)
+            if stopping:
+                return
+
+    def _send_frame(self, rep: _Replica, calls: list, futs: list) -> None:
+        t0 = time.perf_counter()
+        try:
+            frame = rep.client.futures.batch_call(calls)
+        except BaseException as exc:  # noqa: BLE001 - transport refused
+            for fut in futs:
+                if not fut.set_running_or_notify_cancel():
+                    continue
+                fut.set_exception(exc)
+            return
+        us = (time.perf_counter() - t0) * 1e6
+        with self._lock:
+            self._counters["frames"] += 1
+            self._counters["dispatches"] += len(calls)
+            self._counters["dispatch_us_sum"] += us
+            if len(calls) > 1:
+                self._counters["coalesced_calls"] += len(calls)
+
+        def _fan(f: cf.Future) -> None:
+            try:
+                results = f.result()
+            except BaseException as exc:  # noqa: BLE001 - frame died whole
+                results = [exc] * len(futs)
+            for fut, res in zip(futs, results):
+                if not fut.set_running_or_notify_cancel():
+                    continue                    # caller already cancelled
+                try:
+                    if isinstance(res, BaseException):
+                        fut.set_exception(res)
+                    else:
+                        fut.set_result(res)
+                except cf.InvalidStateError:    # cancel raced the fan-out
+                    pass
+
+        frame.add_done_callback(_fan)
+
     def submit(self, prompt, max_new: Optional[int] = None):
         """Serve one request: returns the completed [S + n_generated]
         sequence, transparently failing over if the serving replica dies
@@ -318,22 +436,30 @@ class Router:
                 continue
             attempts += 1
             kwargs = {} if max_new is None else {"max_new": max_new}
-            try:
-                fut = rep.client.futures.generate(prompt, **kwargs)
-            except BaseException as exc:  # noqa: BLE001 - dispatch failed
-                self._release(rep)
-                last_exc = exc
-                tried.add(rep.name)
-                self._drop_replica(rep)
-                failed_over = True
+            if self._coalesce:
+                # Enqueue-only: the dispatcher thread owns the transport
+                # send and the frame-level dispatch accounting. A dispatch
+                # failure surfaces through the future and feeds the same
+                # failover classification below.
+                fut = self._enqueue(rep, "generate", (prompt,), kwargs)
+            else:
+                try:
+                    fut = rep.client.futures.generate(prompt, **kwargs)
+                except BaseException as exc:  # noqa: BLE001 - dispatch failed
+                    self._release(rep)
+                    last_exc = exc
+                    tried.add(rep.name)
+                    self._drop_replica(rep)
+                    failed_over = True
+                    with self._lock:
+                        self._counters["retries"] += 1
+                        self._counters["failovers"] += 1
+                    continue
                 with self._lock:
-                    self._counters["retries"] += 1
-                    self._counters["failovers"] += 1
-                continue
-            with self._lock:
-                self._counters["dispatches"] += 1
-                self._counters["dispatch_us_sum"] += \
-                    (time.perf_counter() - t0) * 1e6
+                    self._counters["dispatches"] += 1
+                    self._counters["frames"] += 1
+                    self._counters["dispatch_us_sum"] += \
+                        (time.perf_counter() - t0) * 1e6
             try:
                 out = fut.result(timeout=self._timeout)
             except cf.TimeoutError as exc:
@@ -351,7 +477,10 @@ class Router:
                 if _is_request_error(exc):
                     with self._lock:
                         self._counters["request_errors"] += 1
-                    raise
+                    # Deliver the service's own exception, not the batch
+                    # envelope: per-call inproc dispatch raises originals,
+                    # and coalesced frames must look the same to callers.
+                    raise unwrap_remote(exc) from exc
                 last_exc = exc
                 tried.add(rep.name)
                 if _is_timeout(exc):
@@ -400,15 +529,24 @@ class Router:
                                     "dispatched": r.dispatched,
                                     "load": dict(r.load)}
                              for name, r in self._replicas.items()}
-        # Per dispatch *attempt* — the sum accrues once per dispatch, so a
-        # request that failed over contributes each of its attempts.
+        # Per dispatch *attempt* — the sum accrues once per dispatch (one
+        # frame may carry many dispatches, so coalescing shows up here as a
+        # lower per-call mean), and a request that failed over contributes
+        # each of its attempts.
         s["mean_dispatch_us"] = s.pop("dispatch_us_sum") / (s["dispatches"]
                                                             or 1)
+        s["mean_calls_per_frame"] = s["dispatches"] / (s["frames"] or 1)
         return s
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
         self._closed.set()
+        with self._pending_cv:
+            self._pending_cv.notify()
+        if self._dispatcher is not None and self._dispatcher.is_alive():
+            # The dispatcher drains (and sends) whatever is pending on its
+            # way out, so in-flight submits still get replies.
+            self._dispatcher.join(timeout=5)
         if self._thread.is_alive():
             self._thread.join(timeout=5)
         with self._lock:

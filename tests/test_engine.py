@@ -249,3 +249,135 @@ def test_fused_sampling_is_sync_invariant(params):
         outs.append([f.result() for f in futs])
     for a, b in zip(*outs):
         np.testing.assert_array_equal(a, b)
+
+
+# -- paged KV pool + shared-prefix reuse --------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "recurrentgemma-2b"])
+@pytest.mark.parametrize("sync_every", [1, 8])
+def test_paged_engine_matches_solo(arch, sync_every):
+    """Paged pool (page_size=8) serves token-identically to solo decoding
+    for the attention stack (paged rings + page-table walk) AND the
+    recurrent stack (no full-context layer to page: the knobs are
+    accepted and the flat per-row layout runs underneath)."""
+    cfg = configs.get_reduced(arch)
+    params = transformer.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 12, 7)]
+    engine = ServeEngine(cfg, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, sync_every=sync_every,
+                         page_size=8, num_pages=12)
+    futs = [engine.submit(p) for p in prompts]
+    _run(engine, futs)
+    import jax.numpy as jnp
+    for p, f in zip(prompts, futs):
+        solo = np.asarray(serve_lib.generate(
+            cfg, params, jnp.asarray(p[None]), max_new=MAX_NEW,
+            context_len=L))[0]
+        np.testing.assert_array_equal(f.result(), solo)
+
+
+def test_prefix_cache_reuse_matches_cold_prefill(params):
+    """Prompts sharing a cached page-aligned prefix skip that prefix's
+    prefill (prefix_tokens_reused > 0, cache hits) and still decode
+    bit-identically to solo serving from a cold cache."""
+    ps = 4
+    rng = np.random.default_rng(22)
+    shared = rng.integers(0, CFG.vocab_size, 12).astype(np.int32)
+    tails = [rng.integers(0, CFG.vocab_size, n).astype(np.int32)
+             for n in (3, 5, 2)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, page_size=ps, num_pages=16)
+    f0 = engine.submit(prompts[0])    # cold: registers the shared pages
+    _run(engine, [f0])
+    futs = [engine.submit(p) for p in prompts[1:]]
+    _run(engine, futs)
+    for p, f in zip(prompts, [f0] + futs):
+        np.testing.assert_array_equal(f.result(), _solo(params, p))
+    s = engine.stats()
+    assert s["prefix_cache"]["hits"] >= 2         # both warm prompts hit
+    assert s["prefix_tokens_reused"] >= 2 * (12 // ps) * ps
+
+
+def test_prefix_pages_released_on_retirement(params):
+    """Retirement releases the rows' page refs immediately; pages that
+    stay resident are exactly the prefix-cache entries' chains, and
+    draining the cache makes the pool whole again."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, page_size=4, num_pages=16)
+    futs = [engine.submit(p) for p in _prompts([10, 13], seed=23)]
+    _run(engine, futs)
+    s = engine.stats()
+    assert s["free_slots"] == 2                   # all rows retired
+    held = {pid for chain in engine._prefix._entries.values()
+            for pid in chain}
+    assert s["pages_in_use"] == len(held)         # cache is the only holder
+    while engine._prefix.evict_one(engine._decref):
+        pass
+    s = engine.stats()
+    assert s["pages_free"] == s["pages_total"]
+
+
+def test_prefix_cache_evicts_under_pool_pressure(params):
+    """A pool too small to keep every retired prompt's prefix cached:
+    admission evicts LRU refcount-zero entries instead of deadlocking,
+    everything completes, and results stay exact."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, page_size=4, num_pages=8)
+    rng = np.random.default_rng(24)
+    prompts = [rng.integers(0, CFG.vocab_size, 12).astype(np.int32)
+               for _ in range(6)]
+    futs = [engine.submit(p) for p in prompts]
+    _run(engine, futs)
+    for p, f in zip(prompts, futs):
+        np.testing.assert_array_equal(f.result(), _solo(params, p))
+    s = engine.stats()
+    assert s["retired"] == 6
+    assert s["prefix_cache"]["evictions"] >= 1
+
+
+def test_request_exceeding_page_pool_fails_fast(params):
+    """A request whose page budget can never be satisfied fails its own
+    future at submit time (like the context_len check) instead of
+    blocking admission forever."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, page_size=4, num_pages=2)
+    fut = engine.submit(np.arange(12, dtype=np.int32))    # needs 4 pages
+    with pytest.raises(ValueError, match="pages"):
+        fut.result(timeout=5)
+    ok = engine.submit(_prompts([3], seed=25)[0])         # 2 pages: fits
+    _run(engine, [ok])
+    assert ok.result().shape == (3 + MAX_NEW,)
+
+
+def test_paged_chunked_prefill_matches_solo(params):
+    """Chunked admission against a paged pool: the B=1 chunk state lands
+    through the copy-on-write scatter (start_page skips shared pages)
+    and every sequence equals solo decoding."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, prefill_chunk=4,
+                         page_size=8, num_pages=9)
+    prompts = _prompts([3, 9, 14, 6], seed=25)
+    futs = [engine.submit(p) for p in prompts]
+    _run(engine, futs)
+    for p, f in zip(prompts, futs):
+        np.testing.assert_array_equal(f.result(), _solo(params, p))
+    s = engine.stats()
+    assert s["free_slots"] == 2                   # no slot or page leaked
+    assert s["pages_in_use"] == len(
+        {pid for chain in engine._prefix._entries.values() for pid in chain})
+
+
+def test_warmup_precompiles_paged_and_chunk_executables(params):
+    """warmup() compiles the paged fused-window ladder and the
+    chunk-shaped prefill_extend without touching live state; serving
+    afterwards is exact."""
+    engine = ServeEngine(CFG, params, num_slots=2, context_len=L,
+                         max_new=MAX_NEW, prefill_chunk=4,
+                         page_size=8, num_pages=9).warmup()
+    futs = [engine.submit(p) for p in _prompts([9, 5], seed=26)]
+    _run(engine, futs)
+    for p, f in zip(_prompts([9, 5], seed=26), futs):
+        np.testing.assert_array_equal(f.result(), _solo(params, p))

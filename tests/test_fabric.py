@@ -380,3 +380,109 @@ def test_router_discovers_late_replicas(fabric):
             assert router.submit(np.arange(2, dtype=np.int32))[-1] == 7
     finally:
         t.join()
+
+
+# -- coalesced dispatch -------------------------------------------------------
+
+def test_coalesced_dispatch_batches_frames(fabric):
+    """While the dispatcher is busy sending one frame, concurrent submits
+    pile up behind it and leave as ONE batch_call frame — every caller
+    still gets its own correct reply."""
+    registry, add = fabric
+    rep = FakeReplica(num_slots=32)
+    add(rep, load={"num_slots": 32, "free_slots": 32, "queue_depth": 0})
+    frames = []
+
+    class SlowClient:
+        """Transport wrapper that makes each frame send take a while —
+        the window in which arrivals coalesce."""
+
+        def __init__(self, inner):
+            self._inner = inner
+
+        @property
+        def futures(self):
+            return self
+
+        def batch_call(self, calls):
+            frames.append(len(calls))
+            time.sleep(0.08)
+            return self._inner.futures.batch_call(calls)
+
+        def close(self):
+            self._inner.close()
+
+    factory = lambda ep: SlowClient(courier.client_for(ep))  # noqa: E731
+    with make_router(registry, client_factory=factory) as router:
+        results = [None] * 8
+
+        def call(i):
+            results[i] = router.submit(np.arange(i + 1, dtype=np.int32))
+
+        threads = [threading.Thread(target=call, args=(i,))
+                   for i in range(8)]
+        threads[0].start()
+        time.sleep(0.03)                  # frame 1 is in flight
+        for th in threads[1:]:
+            th.start()
+        for th in threads:
+            th.join(timeout=30)
+        s = router.stats()
+    for i, out in enumerate(results):
+        np.testing.assert_array_equal(
+            out, np.concatenate([np.arange(i + 1, dtype=np.int32), [7]]))
+    assert s["dispatches"] == 8
+    assert s["frames"] < s["dispatches"]          # something coalesced
+    assert max(frames) >= 2
+    assert s["mean_calls_per_frame"] > 1.0
+    assert s["coalesced_calls"] >= 2
+
+
+def test_coalesced_frame_failure_fans_out_and_fails_over(fabric):
+    """A frame-level transport death must fan the error out to every call
+    in the frame and feed the normal failover path: the request completes
+    on the sibling and the dead replica is evicted registry-wide."""
+    registry, add = fabric
+    good = FakeReplica()
+    add(good)
+    # More attractive load -> always picked first; its transport is dead.
+    dead_name = add(FakeReplica(),
+                    load={"num_slots": 8, "free_slots": 100,
+                          "queue_depth": 0},
+                    name=f"dead-{uuid.uuid4().hex[:8]}")
+
+    class DeadClient:
+        @property
+        def futures(self):
+            return self
+
+        def batch_call(self, calls):
+            raise ConnectionError("transport down")
+
+        def close(self):
+            pass
+
+    factory = lambda ep: (DeadClient() if f"inproc://{dead_name}" == ep  # noqa: E731
+                          else courier.client_for(ep))
+    with make_router(registry, client_factory=factory) as router:
+        out = router.submit(np.arange(3, dtype=np.int32))
+        np.testing.assert_array_equal(out, [0, 1, 2, 7])
+        assert router.stats()["failovers"] >= 1
+    assert good.calls == 1
+    names = [r["name"] for r in registry.lookup()["replicas"]]
+    assert dead_name not in names                 # evicted registry-wide
+
+
+def test_router_score_caps_admission_headroom_at_free_pages(fabric):
+    """A paged replica advertising many free rows but a drained page pool
+    must lose to a sibling with real page headroom: the score caps free
+    slots at free_pages / pages_per_request."""
+    registry, add = fabric
+    roomy, starved = FakeReplica(), FakeReplica()
+    add(roomy, load={"num_slots": 4, "free_slots": 2, "queue_depth": 0})
+    add(starved, load={"num_slots": 4, "free_slots": 4, "queue_depth": 0,
+                       "free_pages": 2, "pages_per_request_ewma": 4.0})
+    with make_router(registry) as router:
+        out = router.submit(np.arange(3, dtype=np.int32))
+        np.testing.assert_array_equal(out, [0, 1, 2, 7])
+    assert roomy.calls == 1 and starved.calls == 0

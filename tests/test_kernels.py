@@ -146,6 +146,76 @@ def test_decode_attention_ring_semantics_match_model():
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # B, H, KV, dh, P, n_log, ps
+    (2, 4, 2, 64, 16, 4, 16),
+    (1, 8, 1, 128, 8, 8, 8),
+    (3, 4, 4, 32, 12, 3, 32),
+    (1, 16, 8, 128, 24, 2, 64),
+]
+
+
+def _paged_inputs(B, H, KV, dh, P, n, ps, dtype, key=KEY):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k_pages = jax.random.normal(ks[1], (P, ps, KV, dh), dtype)
+    v_pages = jax.random.normal(ks[2], (P, ps, KV, dh), dtype)
+    # Arbitrary page-table contents are legal: repeats (shared prefixes)
+    # and page 0 (the engine's trash page) included.
+    pages = jax.random.randint(ks[3], (B, n), 0, P)
+    valid = jax.random.bernoulli(ks[4], 0.7, (B, n * ps)).at[:, 0].set(True)
+    return q, k_pages, v_pages, pages, valid
+
+
+@pytest.mark.parametrize("case", PAGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_sweep(case, dtype):
+    B, H, KV, dh, P, n, ps = case
+    q, kp, vp, pages, valid = _paged_inputs(B, H, KV, dh, P, n, ps, dtype)
+    out = ops.paged_decode_attention(q, kp, vp, pages, valid,
+                                     impl="pallas", interpret=True)
+    expect = ref.paged_decode_attention(q, kp, vp, pages, valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_matches_flat_gather():
+    """Walking the page table block-by-block == gathering the rows' pages
+    into a flat [B, L] ring and running the FLAT kernel on it."""
+    B, H, KV, dh, P, n, ps = 3, 4, 2, 64, 10, 4, 16
+    q, kp, vp, pages, valid = _paged_inputs(B, H, KV, dh, P, n, ps,
+                                            jnp.float32)
+    out = ops.paged_decode_attention(q, kp, vp, pages, valid,
+                                     impl="pallas", interpret=True)
+    k_flat = kp[pages].reshape(B, n * ps, KV, dh)
+    v_flat = vp[pages].reshape(B, n * ps, KV, dh)
+    flat = ops.decode_attention(q, k_flat, v_flat, valid, block_l=ps,
+                                impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(flat),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_decode_dispatch_paths_agree():
+    """Pallas body (interpret) vs the jnp oracle through the SAME
+    ``kernels.ops`` dispatcher, including the all-invalid row whose
+    contract is zeros."""
+    B, H, KV, dh, P, n, ps = 3, 4, 2, 64, 9, 3, 32
+    q, kp, vp, pages, valid = _paged_inputs(B, H, KV, dh, P, n, ps,
+                                            jnp.float32)
+    valid = valid.at[0].set(True).at[1].set(False)   # full / empty / ragged
+    out_pl = ops.paged_decode_attention(q, kp, vp, pages, valid,
+                                        impl="pallas", interpret=True)
+    out_ref = ops.paged_decode_attention(q, kp, vp, pages, valid, impl="ref")
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out_pl[1]),
+                                  np.zeros((H, dh), np.float32))
+
+
+# ---------------------------------------------------------------------------
 # rg-lru scan
 # ---------------------------------------------------------------------------
 

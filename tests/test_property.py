@@ -205,6 +205,39 @@ def test_decode_attention_kernel_matches_oracle(B, hkv, dh, L, density,
     assert (out_pl[dead] == 0).all()
 
 
+@given(st.integers(1, 3),                        # batch
+       st.sampled_from([(2, 1), (4, 2), (4, 4)]),  # (heads, kv heads)
+       st.sampled_from([32, 64]),                # head dim
+       st.sampled_from([(6, 2, 16), (10, 4, 8), (5, 3, 32)]),  # (P, n, ps)
+       st.floats(0.0, 1.0),                      # valid density
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_paged_decode_attention_kernel_matches_oracle(B, hkv, dh, geom,
+                                                      density, seed):
+    """The paged Pallas walk over an arbitrary page table — repeated
+    pages, trash-page (0) entries, any validity mask — matches the
+    gather-then-flat-attention oracle; all-invalid rows yield zeros."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    H, KV = hkv
+    P, n, ps = geom
+    ks = jax.random.split(jax.random.key(seed), 5)
+    q = jax.random.normal(ks[0], (B, H, dh), jnp.float32)
+    kp = jax.random.normal(ks[1], (P, ps, KV, dh), jnp.float32)
+    vp = jax.random.normal(ks[2], (P, ps, KV, dh), jnp.float32)
+    pages = jax.random.randint(ks[3], (B, n), 0, P)
+    valid = jax.random.bernoulli(ks[4], density, (B, n * ps))
+    out_pl = np.asarray(ops.paged_decode_attention(q, kp, vp, pages, valid,
+                                                   impl="pallas",
+                                                   interpret=True))
+    out_ref = np.asarray(ops.paged_decode_attention(q, kp, vp, pages, valid,
+                                                    impl="ref"))
+    np.testing.assert_allclose(out_pl, out_ref, rtol=1e-5, atol=1e-5)
+    dead = ~np.asarray(valid).any(axis=1)
+    assert (out_pl[dead] == 0).all()
+
+
 # ---------------------------------------------------------------------------
 # Optimizer invariants
 # ---------------------------------------------------------------------------
