@@ -101,6 +101,7 @@ from __future__ import annotations
 
 import os
 import queue
+import random
 import threading
 import time
 from concurrent import futures as cf
@@ -109,7 +110,7 @@ import numpy as np
 
 from repro.core import courier
 from repro.core.discovery import Heartbeater, Registry
-from repro.serve.router import Router, is_overloaded
+from repro.serve.router import Router, decorrelated_backoff, is_overloaded
 
 MAX_BATCH = 8
 MAX_WAIT_S = 0.02
@@ -446,6 +447,7 @@ def run(emit) -> None:
     _run_scaling(emit, step_s, rng, cfg.vocab_size,
                  target_us_tok=cont_mixed_us_tok)
     _run_kill(emit, cfg, rng, step_s, n_req=18 if smoke else 30)
+    _run_rollout(emit, cfg, rng, step_s, n_req=15 if smoke else 24)
 
 
 def _pump(engine, stop: threading.Event) -> None:
@@ -664,20 +666,27 @@ class _Fabric:
             courier.inprocess.unregister(name)
 
 
+_BACKOFF_RNG = random.Random(11)
+
+
 def _fabric_submit(router, pool, prompt, max_new) -> cf.Future:
-    """Open-loop submit through the router with exponential client-side
-    back-off on Overloaded (the fabric's retry-later signal; nothing is
-    ever lost — and waiters must not busy-poll a 2-CPU host)."""
+    """Open-loop submit through the router with decorrelated-jitter
+    client-side back-off on Overloaded (the fabric's retry-later signal;
+    nothing is ever lost). Jitter, not a deterministic schedule: when a
+    drain or kill drops capacity, every waiter sees Overloaded at once —
+    synchronized resubmits would re-stampede the fabric on the same tick
+    (and busy-poll a 2-CPU host)."""
     def task():
-        backoff = 0.005
+        backoff = 0.0
         while True:
             try:
                 return router.submit(prompt, max_new)
             except BaseException as exc:  # noqa: BLE001
                 if not is_overloaded(exc):
                     raise
+                backoff = decorrelated_backoff(backoff, _BACKOFF_RNG,
+                                               base_s=0.005, cap_s=0.04)
                 time.sleep(backoff)
-                backoff = min(backoff * 2, 0.04)
     return pool.submit(task)
 
 
@@ -807,8 +816,11 @@ def _run_real1(emit, cfg, schedule, warm_rng) -> None:
 
 
 def _run_kill(emit, cfg, rng, step_s: float, n_req: int) -> None:
-    """Two REAL engines; replica 0 is killed mid-run. In-flight requests
-    must fail over to the sibling: the gate is zero lost."""
+    """Two REAL engines; replica 0 is killed mid-run (a count-triggered
+    ``FaultInjector`` event — the same schedule machinery the chaos demo
+    and the rollout arm use). In-flight requests must fail over to the
+    sibling: the gate is zero lost."""
+    from repro.core.fault import FaultEvent, FaultInjector
     from repro.launch.serve import EngineServer
     fab_names = [f"fab_kill_{i}" for i in range(2)]
     registry = Registry(ttl_s=1.0)
@@ -837,20 +849,29 @@ def _run_kill(emit, cfg, rng, step_s: float, n_req: int) -> None:
         requests = _make_requests(rng, cfg.vocab_size, MIXES["mixed"], n_req)
         # Moderate load: the sibling must absorb the dead replica's share.
         gaps = rng.exponential(2.0 * step_s, size=n_req)
-        kill_at_submit = n_req // 3
+        # Count-triggered crash: beats stop, engine dies, deterministically
+        # mid-run (after a third of the requests have COMPLETED — the
+        # router's stats() is the injector's progress source).
+        injector = FaultInjector(
+            [FaultEvent(kind="kill", target=0, after_served=n_req // 3)],
+            [servers[0]], progress=[router])
         futs = []
         t_kill = None
         t_next = time.perf_counter()
-        for i, ((p, mn), gap) in enumerate(zip(requests, gaps)):
+        for (p, mn), gap in zip(requests, gaps):
             now = time.perf_counter()
             if now < t_next:
                 time.sleep(t_next - now)
             t_sub = time.perf_counter()
             futs.append(_fabric_submit(router, pool, p, mn))
             t_next = t_sub + gap
-            if i + 1 == kill_at_submit:
+            if t_kill is None and injector.poll() == 0:
                 t_kill = time.perf_counter()
-                servers[0].kill()         # crash: beats stop, engine dies
+        while t_kill is None:             # completions lag submissions
+            if injector.poll() == 0:
+                t_kill = time.perf_counter()
+            else:
+                time.sleep(0.002)
         lost = 0
         for fut in futs:
             try:
@@ -881,6 +902,210 @@ def _run_kill(emit, cfg, rng, step_s: float, n_req: int) -> None:
     emit("serve/fabric/kill/recovery", recovery_s * 1e6,
          f"{recovery_s*1e3:.1f}ms to first failed-over completion"
          if recovery_s >= 0 else "SENTINEL: no failover exercised")
+
+
+def _run_rollout(emit, cfg, rng, step_s: float, n_req: int) -> None:
+    """Zero-downtime weight rollout under live traffic, three chaos
+    phases over the SAME 2-replica fleet of REAL store-backed engines:
+
+      1. **bad version** — roll toward a version published with the wrong
+         parameter shapes. The swap's ``restore(like=...)`` health gate
+         rejects it before any weight installs; the controller rolls the
+         fleet back. Gates: ``rollback_ok == 1`` (status rolled_back AND
+         every replica still serves v0), ``rollback_lost == 0``.
+      2. **happy path** — roll v0 -> v1 with the canary gate on. A
+         sampler thread watches ``router.health()["dispatchable"]``
+         throughout. Gates: ``lost == 0``, ``min_dispatchable >= 1``
+         (the fleet never drops below N-1 during the roll). Rows also
+         report the availability dip duration, time-to-full-rollout, and
+         the canary-vs-baseline us/token pair from the router's
+         per-version meters.
+      3. **mid-drain kill** — roll back v1 -> v0, with a FaultInjector
+         predicate that crashes replica 0 the moment the registry marks
+         it draining. The controller must detect the death (TTL
+         eviction), skip it, and finish the roll on the sibling.
+         Gate: ``lost == 0``.
+    """
+    import tempfile
+
+    import jax
+
+    from repro.ckpt.checkpoint import ModelStore, config_hash
+    from repro.core.fault import FaultEvent, FaultInjector
+    from repro.launch.serve import EngineServer
+    from repro.models import transformer
+    from repro.serve.rollout import RolloutController
+
+    store_dir = tempfile.mkdtemp(prefix="rollout_store-")
+    store = ModelStore(store_dir)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    for v in (0, 1):
+        store.publish_version(
+            v, transformer.init_params(cfg, jax.random.key(v)),
+            metadata={"step": v, "config_hash": config_hash(cfg)})
+    # Version 9: right tree structure, wrong leaf shapes — what a version
+    # published for a different architecture looks like. The swap gate
+    # (restore against the live tree) must reject it on the first replica.
+    store.publish_version(
+        9, jax.tree.map(lambda x: np.zeros((np.asarray(x).size + 1,),
+                                           np.asarray(x).dtype), params),
+        metadata={"step": 9, "config_hash": "wrong-arch"})
+
+    names = [f"fab_roll_{i}" for i in range(2)]
+    registry = Registry(ttl_s=1.0)
+    servers = []
+    for name in names:
+        server = EngineServer(cfg, max_new=NEW_MAX, num_slots=NUM_SLOTS,
+                              context_len=CONTEXT_LEN, registry=registry,
+                              heartbeat_s=0.1, name=name,
+                              endpoint=f"inproc://{name}",
+                              store_dir=store_dir, version=0)
+        courier.inprocess.register(name, server)
+        servers.append(server)
+    router = Router(registry, refresh_s=0.05, queue_slack=4,
+                    startup_wait_s=10.0)
+    controller = RolloutController(
+        registry, [router], drain_timeout_s=60.0, poll_s=0.005,
+        canary_fraction=0.25, canary_requests=4, canary_timeout_s=60.0)
+    pool = cf.ThreadPoolExecutor(max_workers=4 * n_req)
+
+    samples: list[tuple[float, int]] = []
+    sampler_stop = threading.Event()
+
+    def _sample():
+        while not sampler_stop.is_set():
+            try:
+                samples.append((time.perf_counter(),
+                                int(router.health()["dispatchable"])))
+            except BaseException:  # noqa: BLE001 - router mid-teardown
+                pass
+            time.sleep(0.005)
+
+    def _traffic(n):
+        """Paced open-loop submissions; returns the request futures."""
+        reqs = _make_requests(rng, cfg.vocab_size, MIXES["mixed"], n)
+        gaps = rng.exponential(2.0 * step_s, size=n)
+        futs = []
+        t_next = time.perf_counter()
+        for (p, mn), gap in zip(reqs, gaps):
+            now = time.perf_counter()
+            if now < t_next:
+                time.sleep(t_next - now)
+            futs.append(_fabric_submit(router, pool, p, mn))
+            t_next = time.perf_counter() + gap
+        return futs
+
+    def _phase(target, injector=None):
+        """Run a rollout with traffic flowing; returns (result, lost)."""
+        futs: list = []
+        done = threading.Event()
+
+        def _pump_traffic():
+            while not done.is_set():
+                futs.extend(_traffic(n_req))
+
+        traffic = threading.Thread(target=_pump_traffic, daemon=True)
+        inj_stop = threading.Event()
+        inj = None
+        if injector is not None:
+            def _pump_inj():
+                while not inj_stop.is_set() and injector.poll():
+                    time.sleep(0.001)
+            inj = threading.Thread(target=_pump_inj, daemon=True)
+        traffic.start()
+        if inj is not None:
+            inj.start()
+        try:
+            result = controller.rollout(target)
+        finally:
+            done.set()
+            traffic.join(timeout=600)
+            inj_stop.set()
+            if inj is not None:
+                inj.join(timeout=10)
+        lost = 0
+        for fut in futs:
+            try:
+                fut.result(timeout=600)
+            except BaseException:  # noqa: BLE001 - a lost request
+                lost += 1
+        return result, lost
+
+    try:
+        # Warm every prompt-length shape on BOTH replicas directly (see
+        # _run_kill: routed warmup can leave a shape to compile mid-roll).
+        for ln in sorted({ln for ln, _ in MIXES["mixed"]}):
+            prompt = rng.integers(0, cfg.vocab_size, ln, dtype=np.int32)
+            for server in servers:
+                server.generate(prompt, max_new=2)
+        sampler = threading.Thread(target=_sample, daemon=True)
+        sampler.start()
+
+        # Phase 1: bad version -> fleet-wide rollback, nothing lost.
+        bad_result, bad_lost = _phase(9)
+        rollback_ok = float(bad_result["status"] == "rolled_back"
+                            and all(s.load().get("version") == 0
+                                    for s in servers))
+
+        # Phase 2: happy v0 -> v1 with the canary gate, sampled.
+        t_roll0 = time.perf_counter()
+        result, lost = _phase(1)
+        t_roll1 = time.perf_counter()
+        promoted = float(result["status"] == "promoted"
+                         and all(s.load().get("version") == 1
+                                 for s in servers))
+        window = [(t, d) for t, d in samples if t_roll0 <= t <= t_roll1]
+        min_disp = min((d for _, d in window), default=-1)
+        dip_s = 0.0
+        for (t_a, d_a), (t_b, _) in zip(window, window[1:]):
+            if d_a < len(servers):
+                dip_s += t_b - t_a
+
+        # Phase 3: roll back v1 -> v0 with a kill the moment replica 0
+        # starts draining (the chaos case the drain mark must survive).
+        injector = FaultInjector(
+            [FaultEvent(
+                kind="kill", target=0,
+                when=lambda: registry.version_table()
+                                     .get(names[0], {})
+                                     .get("draining", False))],
+            [servers[0]])
+        kill_result, kill_lost = _phase(0, injector=injector)
+    finally:
+        sampler_stop.set()
+        pool.shutdown(wait=False)
+        router.close()
+        for server in servers:
+            server.kill()
+        for name in names:
+            courier.inprocess.unregister(name)
+
+    per_version = router.stats().get("per_version", {})
+    emit("serve/rollout/rollback_ok", rollback_ok,
+         f"bad-version roll -> {bad_result['status']} "
+         f"({bad_result.get('reason')}); fleet back on v0 (CI gates == 1)")
+    emit("serve/rollout/rollback_lost", float(bad_lost),
+         "requests lost during the bad-version rollback (CI gates == 0)")
+    emit("serve/rollout/lost", float(lost),
+         f"requests lost during the v0->v1 roll, promoted={promoted:.0f} "
+         "(CI gates == 0)")
+    emit("serve/rollout/min_dispatchable", float(min_disp),
+         f"sampled every 5ms across the roll, n={len(window)} "
+         "(CI gates >= 1: never below N-1)")
+    emit("serve/rollout/dip_s", dip_s * 1e6,
+         f"{dip_s*1e3:.1f}ms total below full dispatchable capacity")
+    emit("serve/rollout/time_to_full", result["duration_s"] * 1e6,
+         f"{result['duration_s']:.2f}s drain->swap->canary->promote, "
+         f"canary={'ok' if (result.get('canary') or {}).get('ok') else '-'}")
+    for label, key in (("canary_tok", "1"), ("baseline_tok", "0")):
+        row = per_version.get(key)
+        if row and row["completed"]:
+            emit(f"serve/rollout/{label}", row["us_per_token"],
+                 f"v{key}: n={row['completed']},"
+                 f"p50={row['p50_lat_us']/1e3:.1f}ms")
+    emit("serve/rollout/middrain/lost", float(kill_lost),
+         f"kill at drain-start -> {kill_result['status']}, "
+         f"replicas={kill_result.get('replicas')} (CI gates == 0)")
 
 
 if __name__ == "__main__":

@@ -9,11 +9,17 @@ heartbeat load reports; routers dispatch each request to the
 least-loaded replica and fail over when one dies. ``--kill-after N``
 is the failover demo — one replica is killed after N requests have
 been served (deterministically mid-run) and traffic keeps flowing on
-its siblings:
+its siblings. ``--rollout-after N`` is the zero-downtime rollout demo:
+v0 and v1 are published into a versioned model store (``--store DIR``,
+tempdir by default) and after N served requests a RolloutController
+rolls the fleet v0 -> v1 one replica at a time (drain, hot-swap between
+decode windows, health probe, canary) while requests keep completing:
 
     PYTHONPATH=src python examples/serve_lm.py --clients 3 --requests 4
     PYTHONPATH=src python examples/serve_lm.py --replicas 2 --routers 1 \\
         --requests 6 --kill-after 4
+    PYTHONPATH=src python examples/serve_lm.py --replicas 2 --routers 1 \\
+        --requests 8 --rollout-after 2
 """
 
 from repro.launch.serve import main

@@ -1,23 +1,35 @@
 """Sharded checkpointing with async save (paper §6's self-restoring nodes).
 
 Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
-``manifest.json`` describing the tree. Leaves are written from host memory
-(``jax.device_get``); restore can re-place them under any sharding — that,
-plus mesh-shape-agnostic specs, is what makes restarts *elastic* (see
-``repro.ckpt.elastic``).
+``manifest.json`` describing the tree (and, for published versions, a
+``meta.json`` with step / config hash / eval metrics). Leaves are written
+from host memory (``jax.device_get``); restore can re-place them under any
+sharding — that, plus mesh-shape-agnostic specs, is what makes restarts
+*elastic* (see ``repro.ckpt.elastic``).
 
-Atomicity: writes land in ``step_<N>.tmp`` and are renamed only when
-complete, so a node killed mid-save never corrupts its latest checkpoint.
+Atomicity & durability: writes land in ``step_<N>.tmp`` and are renamed
+only when complete, so a node killed mid-save never corrupts its latest
+checkpoint, and a replica restoring mid-write never sees a partial one
+(``all_steps``/``restore_latest`` additionally skip any directory without a
+readable manifest — e.g. debris from an interrupted rename dance). Durable
+saves (``save(..., durable=True)``, used by ``publish``) fsync every file
+and the directory before the rename, so a published model version survives
+power loss, not just process death.
+
+``ModelStore`` builds the serving-side view on the same layout: versions
+are published atomically with metadata, replicas load them by id, and GC
+never collects a version a live replica reports serving (``retain_fn``).
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 from concurrent import futures
-from typing import Any, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 import numpy as np
@@ -39,7 +51,35 @@ def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
     return out, treedef
 
 
-def save(tree, directory: str) -> None:
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def config_hash(cfg: Any) -> str:
+    """Stable short hash of a model config (dataclass or anything
+    repr-able) — stored in version metadata so a replica can refuse to
+    hot-swap weights built for a different architecture."""
+    import dataclasses as dc
+    if dc.is_dataclass(cfg) and not isinstance(cfg, type):
+        blob = json.dumps(dc.asdict(cfg), sort_keys=True, default=str)
+    else:
+        blob = repr(cfg)
+    return hashlib.blake2b(blob.encode(), digest_size=8).hexdigest()
+
+
+def save(tree, directory: str, metadata: Optional[dict] = None,
+         durable: bool = False) -> None:
+    """Write ``tree`` under ``directory`` atomically (tmp dir + rename).
+
+    ``durable=True`` additionally fsyncs every leaf file, the manifest, the
+    tmp dir, and the parent dir around the rename — required for published
+    model versions that must survive machine crash, optional for periodic
+    train checkpoints where losing the very last one is acceptable.
+    """
     tmp = directory + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -49,14 +89,64 @@ def save(tree, directory: str) -> None:
     for name, leaf in named:
         arr = np.asarray(jax.device_get(leaf))
         fname = name.replace("/", "__") + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr)
+            if durable:
+                f.flush()
+                os.fsync(f.fileno())
         manifest.append({"name": name, "file": fname,
                          "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    if metadata is not None:
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(metadata, f)
+            if durable:
+                f.flush()
+                os.fsync(f.fileno())
+    # The manifest lands last: a directory with a manifest is complete by
+    # construction, which is what lets readers treat "no manifest" as
+    # "half-written — skip".
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        if durable:
+            f.flush()
+            os.fsync(f.fileno())
+    if durable:
+        _fsync_dir(tmp)
     if os.path.exists(directory):
-        shutil.rmtree(directory)
-    os.replace(tmp, directory)
+        # Overwrite dance: park the old dir aside so there is never a
+        # moment where ``directory`` exists half-built. If we crash after
+        # the rmtree-equivalent below, readers see either old or new —
+        # never a partial mix.
+        trash = directory + ".old"
+        if os.path.exists(trash):
+            shutil.rmtree(trash)
+        os.rename(directory, trash)
+        os.replace(tmp, directory)
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        os.replace(tmp, directory)
+    if durable:
+        _fsync_dir(os.path.dirname(os.path.abspath(directory)))
+
+
+def is_complete(directory: str) -> bool:
+    """A checkpoint dir is complete iff its manifest is present and parses
+    — the write protocol guarantees the manifest lands last."""
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            json.load(f)
+        return True
+    except (OSError, ValueError):
+        return False
+
+
+def load_metadata(directory: str) -> dict:
+    """The ``meta.json`` written at publish time ({} if absent)."""
+    try:
+        with open(os.path.join(directory, "meta.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
 
 
 def restore(directory: str, like=None, shardings=None):
@@ -88,11 +178,20 @@ def restore(directory: str, like=None, shardings=None):
 
 
 class CheckpointManager:
-    """Periodic, async, retention-limited checkpoints for stateful nodes."""
+    """Periodic, async, retention-limited checkpoints for stateful nodes.
 
-    def __init__(self, directory: str, keep: int = 3):
+    ``retain_fn`` (optional) returns the set of step ids that are pinned —
+    e.g. versions live serve replicas report serving (read off the
+    Registry's version table). ``_gc`` never deletes a retained step, no
+    matter how old, so a rollout can always roll *back* to the version the
+    fleet was on.
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 retain_fn: Optional[Callable[[], Iterable[int]]] = None):
         self.directory = directory
         self.keep = keep
+        self._retain_fn = retain_fn
         os.makedirs(directory, exist_ok=True)
         self._pool = futures.ThreadPoolExecutor(max_workers=1,
                                                 thread_name_prefix="ckpt")
@@ -103,26 +202,36 @@ class CheckpointManager:
         return os.path.join(self.directory, f"step_{step:010d}")
 
     def all_steps(self) -> list[int]:
+        """Complete checkpoints only: half-written dirs (no manifest yet —
+        in-flight background save, or debris from a crash mid-write) are
+        invisible to readers."""
         steps = []
         for name in os.listdir(self.directory):
-            if name.startswith("step_") and not name.endswith(".tmp"):
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and not name.endswith(".old")):
                 try:
-                    steps.append(int(name[5:]))
+                    step = int(name[5:])
                 except ValueError:
-                    pass
+                    continue
+                if is_complete(os.path.join(self.directory, name)):
+                    steps.append(step)
         return sorted(steps)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def save(self, step: int, tree, blocking: bool = False) -> None:
+    def save(self, step: int, tree, blocking: bool = False,
+             metadata: Optional[dict] = None, durable: bool = False) -> None:
         # Snapshot to host now (cheap on CPU; on TPU this is the D2H copy),
-        # write in the background so the train loop keeps stepping.
+        # write in the background so the train loop keeps stepping. The
+        # background write inherits the same tmp-dir + rename protocol, so
+        # a reader (or a crash) mid-write never observes a partial step.
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _write():
-            save(host_tree, self._step_dir(step))
+            save(host_tree, self._step_dir(step), metadata=metadata,
+                 durable=durable)
             self._gc()
 
         with self._lock:
@@ -131,6 +240,18 @@ class CheckpointManager:
             self._pending = self._pool.submit(_write)
             if blocking:
                 self._pending.result()
+
+    def publish(self, step: int, tree, metadata: Optional[dict] = None,
+                blocking: bool = True) -> None:
+        """Atomic, *durable* publish of a model version: fsync every file
+        and directory around the rename. Blocking by default — a rollout
+        must not announce a version whose bytes may still be in page
+        cache."""
+        self.save(step, tree, blocking=blocking, metadata=dict(metadata or {}),
+                  durable=True)
+
+    def metadata(self, step: int) -> dict:
+        return load_metadata(self._step_dir(step))
 
     def wait(self) -> None:
         with self._lock:
@@ -144,6 +265,45 @@ class CheckpointManager:
         return step, restore(self._step_dir(step), like, shardings)
 
     def _gc(self) -> None:
+        retained = set()
+        if self._retain_fn is not None:
+            try:
+                retained = {int(s) for s in self._retain_fn()}
+            except Exception:  # noqa: BLE001 - can't read pins: delete nothing
+                return
         steps = self.all_steps()
         for s in steps[:-self.keep] if self.keep else []:
+            if s in retained:
+                continue
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+
+class ModelStore(CheckpointManager):
+    """Versioned model weights for the serve fabric, on the checkpoint
+    layout (a version id *is* a step id — the train loop publishes, the
+    fleet serves).
+
+    The store itself holds no rollout state: which replica serves which
+    version lives in the Registry's membership table, which is what makes
+    a crashed RolloutController re-derivable. Wire ``retain_fn`` to the
+    registry's version table so GC can never collect a version that is
+    still live on some replica.
+    """
+
+    def publish_version(self, version: int, tree,
+                        metadata: Optional[dict] = None) -> None:
+        self.publish(int(version), tree, metadata=metadata, blocking=True)
+
+    def load_version(self, version: int, like=None, shardings=None):
+        path = self._step_dir(int(version))
+        if not is_complete(path):
+            raise FileNotFoundError(
+                f"model version {version} not published (or incomplete) "
+                f"in {self.directory}")
+        return restore(path, like, shardings)
+
+    def versions(self) -> list[int]:
+        return self.all_steps()
+
+    def latest_version(self) -> Optional[int]:
+        return self.latest_step()

@@ -16,8 +16,9 @@ Public API mirrors the paper:
 from repro.core import courier
 from repro.core.addressing import Address, AddressTable
 from repro.core.discovery import Heartbeater, Registry, ReplicaInfo
-from repro.core.fault import (ALWAYS_RESTART, NO_RESTART, NodeFailure,
-                              RestartPolicy, hedged_map)
+from repro.core.fault import (ALWAYS_RESTART, NO_RESTART, FaultEvent,
+                              FaultInjector, NodeFailure, RestartPolicy,
+                              hedged_map)
 from repro.core.handles import Handle, collect_handles, map_handles
 from repro.core.launchers import (DryRunLauncher, Launcher, ProcessLauncher,
                                   ProgramTestError, ThreadLauncher,
@@ -39,6 +40,7 @@ __all__ = [
     "Launcher", "ThreadLauncher", "ProcessLauncher", "DryRunLauncher",
     "launch_and_wait", "ProgramTestError",
     "RestartPolicy", "NodeFailure", "NO_RESTART", "ALWAYS_RESTART", "hedged_map",
+    "FaultEvent", "FaultInjector",
     "Registry", "Heartbeater", "ReplicaInfo",
     "courier",
 ]

@@ -72,13 +72,32 @@ class Registry:
     # -- replica side --------------------------------------------------------
     def register(self, name: str, endpoint: str,
                  load: Optional[dict] = None) -> int:
-        """Add (or refresh) a replica; returns the new generation."""
+        """Add (or refresh) a replica; returns the new generation.
+
+        Registration clears any drain mark: a replica that was evicted and
+        came back is dispatchable again (the rollout controller re-derives
+        and re-drains if it still wants it out of rotation)."""
         with self._lock:
             self._entries[name] = {"endpoint": endpoint,
                                    "load": dict(load or {}),
-                                   "beat": time.monotonic()}
+                                   "beat": time.monotonic(),
+                                   "draining": False}
             self._generation += 1
             return self._generation
+
+    def set_draining(self, name: str, draining: bool) -> bool:
+        """Mark a replica undispatchable (or back in rotation) while it
+        stays registered and heartbeating — the rollout controller's drain
+        primitive. Routers stop picking a draining replica; its in-flight
+        requests finish naturally. Returns whether the entry existed."""
+        with self._lock:
+            entry = self._entries.get(name)
+            if entry is None:
+                return False
+            if entry.get("draining", False) != bool(draining):
+                entry["draining"] = bool(draining)
+                self._generation += 1
+            return True
 
     def heartbeat(self, name: str, load: Optional[dict] = None) -> bool:
         """Refresh a replica's TTL (and load report). Returns False when
@@ -110,9 +129,24 @@ class Registry:
             self._evict_expired(now)
             replicas = [{"name": name, "endpoint": e["endpoint"],
                          "load": dict(e["load"]),
+                         "draining": e.get("draining", False),
                          "age_s": now - e["beat"]}
                         for name, e in sorted(self._entries.items())]
             return {"generation": self._generation, "replicas": replicas}
+
+    def version_table(self) -> dict:
+        """``{name: {endpoint, version, draining}}`` for every live
+        replica — the model version each one reports serving (piggybacked
+        on its heartbeat load report). This table is the rollout's single
+        source of truth: a controller that restarts mid-rollout re-derives
+        exactly where it was from here."""
+        now = time.monotonic()
+        with self._lock:
+            self._evict_expired(now)
+            return {name: {"endpoint": e["endpoint"],
+                           "version": e["load"].get("version"),
+                           "draining": e.get("draining", False)}
+                    for name, e in sorted(self._entries.items())}
 
     def report_failure(self, name: str) -> bool:
         """A caller observed ``name`` failing: evict it now. A live replica
@@ -169,6 +203,26 @@ class Heartbeater:
         self._thread: Optional[threading.Thread] = None
         self._beats = 0
         self._misses = 0
+        self._pause_until = 0.0
+
+    def pause(self, seconds: float) -> None:
+        """Fault hook: skip beats for ``seconds``. To the registry the
+        node looks dead (TTL eviction); when beats resume, the next one
+        comes back False and the loop re-registers — the full stall →
+        evict → revive cycle, injectable on demand."""
+        self._pause_until = time.monotonic() + float(seconds)
+
+    def beat_now(self) -> None:
+        """One immediate out-of-band beat (fresh ``load_fn`` report) —
+        e.g. right after a weight swap, so the registry's version table
+        updates without waiting out a period."""
+        try:
+            if not self._registry.heartbeat(self._name, self._load()):
+                self._registry.register(self._name, self._endpoint,
+                                        self._load())
+            self._beats += 1
+        except Exception:  # noqa: BLE001 - registry down: miss this beat
+            self._misses += 1
 
     def _load(self) -> Optional[dict]:
         if self._load_fn is None:
@@ -180,6 +234,9 @@ class Heartbeater:
 
     def _loop(self) -> None:
         while not (self._stop.is_set() or self._own_stop.is_set()):
+            if time.monotonic() < self._pause_until:
+                self._own_stop.wait(self._period)
+                continue
             try:
                 if not self._registry.heartbeat(self._name, self._load()):
                     # Evicted (TTL miss during a stall, a failure report,

@@ -60,7 +60,7 @@ import numpy as np
 from repro import configs, core as lp
 from repro.models.config import ModelConfig
 from repro.serve import decode as serve_lib
-from repro.serve.router import Router, is_overloaded
+from repro.serve.router import Router, decorrelated_backoff, is_overloaded
 
 # Bounded, thread-safe history for Batcher.stats(): the worker thread
 # appends per-batch sizes while stats() RPCs read concurrently.
@@ -105,11 +105,23 @@ class EngineServer:
     With ``registry`` set (the serve fabric), the server registers its
     own endpoint — learned from the worker context, no plumbing through
     the program — and heartbeats its live load report (``load()``:
-    free slots, queue depth, EWMA us/token), which is the routers'
-    routing signal. ``kill()`` crashes the replica in place (stops the
-    engine *and* the heartbeats without deregistering): in-flight
-    requests fail over, the registry evicts on missed beats — the
-    failure path tests and the chaos demo drive exactly this.
+    free slots, queue depth, EWMA us/token, loaded model version), which
+    is the routers' routing signal *and* the rollout controller's version
+    table. ``kill()`` crashes the replica in place (stops the engine
+    *and* the heartbeats without deregistering): in-flight requests fail
+    over, the registry evicts on missed beats — the failure path tests
+    and the chaos demo drive exactly this. ``stall``/``drop`` are the
+    FaultInjector's softer weapons (missed beats / transport blackhole
+    for a window, then recovery).
+
+    With ``store_dir`` set, weights load from a versioned
+    :class:`~repro.ckpt.checkpoint.ModelStore` (``version=None`` means
+    latest) instead of fresh init, and ``load_version()`` hot-swaps to
+    another published version: the restore is checked against the
+    current tree (shape identity — same architecture or the RPC fails,
+    which is the rollout's health gate firing) and installed between
+    decode windows, so the compiled ladder stays warm and in-flight
+    requests keep decoding.
     """
 
     def __init__(self, model_cfg: ModelConfig, max_new: int = 8,
@@ -122,13 +134,27 @@ class EngineServer:
                  prefill_chunk: int | None = None,
                  page_size: int | None = None,
                  num_pages: int | None = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 store_dir: str | None = None,
+                 version: int | None = None):
         import jax
         from repro.models import transformer
         from repro.serve.engine import ServeEngine
         self._cfg = model_cfg
         self._timeout = request_timeout_s
+        self._store = None
+        self._version: int | None = None
+        self._drop_until = 0.0
         params = transformer.init_params(model_cfg, jax.random.key(0))
+        if store_dir is not None:
+            from repro.ckpt.checkpoint import ModelStore
+            self._store = ModelStore(store_dir)
+            v = self._store.latest_version() if version is None else version
+            if v is None:
+                raise ValueError(f"model store {store_dir!r} has no "
+                                 "published versions")
+            params = self._store.load_version(int(v), like=params)
+            self._version = int(v)
         self._engine = ServeEngine(
             model_cfg, params, num_slots=num_slots,
             context_len=context_len or 128,
@@ -151,6 +177,8 @@ class EngineServer:
                 period_s=heartbeat_s, stop_event=ctx.stop_event).start()
 
     def generate(self, prompt, max_new=None):
+        if time.monotonic() < self._drop_until:
+            raise ConnectionError("transport drop (fault injection)")
         fut = self._engine.submit(np.asarray(prompt, np.int32).reshape(-1),
                                   max_new=max_new)
         from concurrent import futures as cf
@@ -163,11 +191,51 @@ class EngineServer:
             raise
 
     def load(self):
-        """The routing signal: free slots, queued requests, EWMA us/token."""
-        return self._engine.load()
+        """The routing signal: free slots, queued requests, EWMA us/token —
+        plus the loaded model version, which the heartbeat carries into
+        the Registry's version table (the rollout's source of truth)."""
+        report = self._engine.load()
+        if self._version is not None:
+            report["version"] = self._version
+        return report
 
     def health(self):
-        return {"status": "ok", **self._engine.load()}
+        status = "ok" if self._engine.alive else "stopped"
+        return {"status": status, **self.load()}
+
+    def load_version(self, version):
+        """Hot-swap to a published model version (the rollout's swap
+        step). Restores against the current tree — a version published
+        for a different architecture fails *here*, before any weight is
+        installed — then applies between decode windows."""
+        if self._store is None:
+            raise RuntimeError("EngineServer has no model store attached "
+                               "(pass store_dir=)")
+        params = self._store.load_version(int(version),
+                                          like=self._engine._params)
+        self._engine.swap_params(params)
+        self._version = int(version)
+        if self._heartbeater is not None:
+            # Don't wait a beat period to advertise the new version.
+            self._heartbeater.beat_now()
+        return {"version": self._version}
+
+    def stall(self, seconds: float):
+        """Fault hook: miss heartbeats for ``seconds`` — the registry
+        TTL-evicts this replica, then its resumed beats re-register it
+        (the stall → evict → revive cycle). The engine keeps serving
+        whatever is already in flight."""
+        if self._heartbeater is not None:
+            self._heartbeater.pause(seconds)
+        return "stalled"
+
+    def drop(self, seconds: float):
+        """Fault hook: blackhole the request transport for ``seconds`` —
+        ``generate`` raises ``ConnectionError``, routers fail over and
+        report the failure; heartbeats continue, so the replica
+        re-registers and recovers once the window passes."""
+        self._drop_until = time.monotonic() + float(seconds)
+        return "dropped"
 
     def kill(self):
         """Simulate a replica crash: stop heartbeats (no deregistration)
@@ -314,6 +382,7 @@ class Client:
 
         def drain_one():
             t0, prompt, fut = pending.pop(0)
+            backoff = 0.0
             while True:
                 try:
                     out = fut.result(timeout=120)
@@ -321,9 +390,15 @@ class Client:
                 except BaseException as exc:  # noqa: BLE001
                     # Overloaded is the fabric's retry-later signal;
                     # latency keeps accruing from the first attempt.
+                    # Decorrelated jitter on the resubmit: every client
+                    # sees Overloaded at the same moment when capacity
+                    # dips (a drain, a kill) — a fixed schedule would
+                    # have them all stampede back on the same tick.
                     if not is_overloaded(exc):
                         raise
-                    time.sleep(0.01)
+                    backoff = decorrelated_backoff(backoff, self._rng,
+                                                   base_s=0.005, cap_s=0.2)
+                    time.sleep(backoff)
                     fut = self._batcher.futures.submit(prompt)
             records.append((time.monotonic() - t0, len(out)))
 
@@ -351,13 +426,23 @@ class Meter:
     every source, with the per-source percentile summaries namespaced
     under ``per_source`` — N routers writing per-replica summaries to the
     same ``--meter-json`` path previously meant last-writer-wins.
+
+    ``holds`` delays the program stop past the last served request: each
+    hold is dropped by a ``release()`` RPC, and the stop fires only once
+    the count is reached AND every hold is released. The rollout demo
+    uses one hold so a RolloutDriver that gets scheduled late (starved
+    thread on a loaded host) still finds the fleet's courier services
+    registered instead of racing program teardown.
     """
 
-    def __init__(self, expected: int, summary_path: str | None = None):
+    def __init__(self, expected: int, summary_path: str | None = None,
+                 holds: int = 0):
         self._expected = expected
         self._summary_path = summary_path
         self._lat: dict[str, list[float]] = {}
         self._count = 0
+        self._holds = holds
+        self._summary_done = False
         self._lock = threading.Lock()
 
     @staticmethod
@@ -371,7 +456,10 @@ class Meter:
         with self._lock:
             self._lat.setdefault(source or "default", []).append(latency_s)
             self._count += 1
-            done = self._count >= self._expected
+            done = self._count >= self._expected and not self._summary_done
+            if done:
+                self._summary_done = True
+            stop = self._count >= self._expected and self._holds == 0
         if done:
             merged = np.concatenate(
                 [np.array(v) for v in self._lat.values()])
@@ -387,6 +475,15 @@ class Meter:
                 with open(self._summary_path, "w") as f:
                     json.dump(summary, f, indent=2)
                     f.write("\n")
+        if stop:
+            lp.stop_program()
+
+    def release(self, tag: str = "") -> None:
+        """Drop one stop-hold (e.g. the RolloutDriver finished its roll)."""
+        with self._lock:
+            self._holds = max(0, self._holds - 1)
+            stop = self._count >= self._expected and self._holds == 0
+        if stop:
             lp.stop_program()
 
 
@@ -398,16 +495,28 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                   heartbeat_s: float = 0.25,
                   kill_after: int | None = None,
                   page_size: int | None = None,
-                  num_pages: int | None = None) -> lp.Program:
+                  num_pages: int | None = None,
+                  store_dir: str | None = None,
+                  model_version: int | None = None,
+                  rollout: int | None = None,
+                  rollout_after: int | None = None,
+                  canary_fraction: float = 0.25) -> lp.Program:
     """Wire the serving topology as a Launchpad program.
 
     ``routers == 0`` (default) is the direct PR-4 path — one engine (or
     the lockstep baseline) behind a Batcher; ``replicas`` must be 1.
     ``routers >= 1`` builds the replicated serve fabric:
     Registry -> Routers -> EngineServers, clients partitioned across
-    routers round-robin. ``kill_after`` adds a Chaos node that kills
-    replica 0 once that many requests have been served — mid-run by
-    construction (the failover demo: traffic must keep flowing).
+    routers round-robin. ``kill_after`` adds a FaultInjector node that
+    kills replica 0 once that many requests have been served — mid-run
+    by construction (the failover demo: traffic must keep flowing).
+
+    ``store_dir`` points the engines at a versioned ModelStore
+    (``model_version`` picks the starting version; None = latest), and
+    ``rollout=V`` adds a RolloutController node that rolls the fleet to
+    version ``V`` once ``rollout_after`` requests have been served —
+    drain, hot-swap, canary-compare, promote (or roll back), while the
+    clients' traffic keeps completing.
     """
     p = lp.Program(f"serve-{model_cfg.name}")
     total = num_clients * requests_per_client
@@ -448,6 +557,13 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
     if kill_after is not None and kill_after >= total:
         raise ValueError(f"--kill-after {kill_after} never fires: only "
                          f"{total} requests will be served")
+    if rollout is not None:
+        if store_dir is None:
+            raise ValueError("rollout= needs store_dir= (a ModelStore with "
+                             "the target version published)")
+        if rollout_after is None or rollout_after >= total:
+            raise ValueError("rollout= needs rollout_after < total requests "
+                             "so the roll happens under load")
 
     with p.group("registry"):
         registry = p.add_node(lp.CourierNode(lp.Registry,
@@ -459,7 +575,8 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                 EngineServer, model_cfg, max_new=max_new,
                 num_slots=num_slots, context_len=prompt_len + max_new,
                 page_size=page_size, num_pages=num_pages,
-                registry=registry, heartbeat_s=heartbeat_s)))
+                registry=registry, heartbeat_s=heartbeat_s,
+                store_dir=store_dir, version=model_version)))
     router_nodes, router_handles = [], []
     with p.group("router"):
         for _ in range(routers):
@@ -467,7 +584,8 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                                   refresh_s=heartbeat_s)
             router_handles.append(p.add_node(node))
             router_nodes.append(node)
-    meter = p.add_node(lp.CourierNode(Meter, total, summary_path=meter_json))
+    meter = p.add_node(lp.CourierNode(Meter, total, summary_path=meter_json,
+                                      holds=1 if rollout is not None else 0))
     with p.group("client"):
         for i in range(num_clients):
             m = i % routers
@@ -477,42 +595,79 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                 source=router_nodes[m].name))
     if kill_after is not None:
         with p.group("chaos"):
-            p.add_node(lp.PyNode(Chaos, replica_handles[0],
-                                 list(router_handles), kill_after))
+            p.add_node(lp.PyNode(
+                lp.FaultInjector,
+                [lp.FaultEvent(kind="kill", target=0,
+                               after_served=kill_after)],
+                [replica_handles[0]], progress=list(router_handles)))
+    if rollout is not None:
+        with p.group("rollout"):
+            p.add_node(lp.PyNode(RolloutDriver, registry,
+                                 list(router_handles), rollout,
+                                 rollout_after,
+                                 canary_fraction=canary_fraction,
+                                 meter=meter))
     return p
 
 
-class Chaos:
-    """Failover demo: crash one replica in place once the router has
-    completed ``after_served`` requests — count-based, not timer-based,
-    so the kill lands mid-run on any host speed (a timer either misses a
-    fast warm run or fires before a cold one got going). The router's
-    ``completed`` counter is the live progress signal: clients flush
-    their meter records in one batch at the end, so the meter cannot
-    drive this. The fabric's promise is that nobody notices the kill —
-    the meter still reaches its expected count because in-flight
-    requests fail over to the sibling(s). The poll must be much finer
-    than the gap between the first and last completion: once the jit
-    executables are warm, fused decode windows drain a whole small
-    demo's worth of requests in tens of milliseconds."""
+class RolloutDriver:
+    """Program node that triggers a fleet rollout mid-run: once the
+    routers have completed ``after_served`` requests (count-based, like
+    the FaultInjector's kill trigger — lands mid-run on any host speed),
+    it runs a :class:`~repro.serve.rollout.RolloutController` against the
+    registry. All rollout state lives in the registry's version table, so
+    this node restarting just re-runs ``rollout()`` and resumes.
 
-    def __init__(self, replica, routers, after_served: int):
-        self._replica = replica
-        self._routers = routers          # every router: completions are
-        self._after = after_served       # counted per admission front
+    The driver pins the program open: it holds one Meter stop-hold (see
+    ``Meter.release``) until its roll completes, so the fleet's courier
+    services are guaranteed to still be registered when it runs — even
+    when this thread is scheduled so late (loaded host) that every
+    request has already been served."""
+
+    def __init__(self, registry, routers, version: int, after_served: int,
+                 canary_fraction: float = 0.25, canary_requests: int = 4,
+                 canary_timeout_s: float = 5.0, meter=None):
+        self._registry = registry
+        self._routers = routers
+        self._version = version
+        self._after = after_served
+        self._canary_fraction = canary_fraction
+        self._canary_requests = canary_requests
+        self._canary_timeout = canary_timeout_s
+        self._meter = meter
 
     def run(self):
+        from repro.serve.rollout import RolloutController
         ctx = lp.get_current_context()
-        while not ctx.wait_for_stop(0.002):
-            done = sum(r.stats()["completed"] for r in self._routers)
-            if done < self._after:
-                continue
-            try:
-                self._replica.kill()
-                print("chaos: killed one engine replica; traffic continues")
-            except BaseException as exc:  # noqa: BLE001 - already dead
-                print(f"chaos: kill failed ({exc!r})")
-            return
+        try:
+            while not ctx.wait_for_stop(0.002):
+                try:
+                    done = sum(r.stats()["completed"]
+                               for r in self._routers)
+                except Exception:
+                    # Bring-up race: routers register their courier
+                    # services asynchronously, and on a loaded host that
+                    # can outlast one lookup window. Transient here —
+                    # keep polling instead of taking the program down
+                    # (launch_and_wait runs fail-fast, max_restarts=0).
+                    continue
+                if done < self._after:
+                    continue
+                result = RolloutController(
+                    self._registry, self._routers,
+                    canary_fraction=self._canary_fraction,
+                    canary_requests=self._canary_requests,
+                    canary_timeout_s=self._canary_timeout,
+                ).rollout(self._version)
+                print(f"rollout: {result['status']} -> v{self._version} "
+                      f"in {result.get('duration_s', 0.0):.2f}s", flush=True)
+                return
+        finally:
+            if self._meter is not None:
+                try:
+                    self._meter.release("rollout")
+                except Exception:
+                    pass
 
 
 def main(argv=None):
@@ -539,16 +694,40 @@ def main(argv=None):
     ap.add_argument("--kill-after", type=int, default=None, metavar="N",
                     help="failover demo: kill replica 0 after N requests "
                          "have been served (deterministically mid-run)")
+    ap.add_argument("--store", default=None,
+                    help="ModelStore directory (created and seeded with "
+                         "v0/v1 for the rollout demo when absent)")
+    ap.add_argument("--rollout-after", type=int, default=None, metavar="N",
+                    help="rollout demo: roll the fleet v0 -> v1 after N "
+                         "requests (needs the fabric; publishes both "
+                         "versions into --store first)")
     args = ap.parse_args(argv)
     cfg = (configs.get_reduced(args.arch) if args.arch
            else configs.get_reduced("qwen2-1.5b"))
+    store_dir, model_version, rollout = args.store, None, None
+    if args.rollout_after is not None:
+        import tempfile
+        import jax
+        from repro.ckpt.checkpoint import ModelStore, config_hash
+        from repro.models import transformer
+        store_dir = store_dir or tempfile.mkdtemp(prefix="modelstore-")
+        store = ModelStore(store_dir)
+        for v in (0, 1):
+            if v not in store.versions():
+                store.publish_version(
+                    v, transformer.init_params(cfg, jax.random.key(v)),
+                    metadata={"step": v, "config_hash": config_hash(cfg)})
+        model_version, rollout = 0, 1
     program = build_program(cfg, num_clients=args.clients,
                             requests_per_client=args.requests,
                             mode=args.mode, num_slots=args.slots,
                             meter_json=args.meter_json,
                             replicas=args.replicas, routers=args.routers,
                             kill_after=args.kill_after,
-                            page_size=args.page_size, num_pages=args.pages)
+                            page_size=args.page_size, num_pages=args.pages,
+                            store_dir=store_dir, model_version=model_version,
+                            rollout=rollout,
+                            rollout_after=args.rollout_after)
     print(program)
     lp.launch_and_wait(program, timeout_s=600)
 

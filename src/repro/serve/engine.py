@@ -316,7 +316,11 @@ class ServeEngine:
         self._counters = dict(submitted=0, admitted=0, retired=0, failed=0,
                               steps=0, decode_tokens=0, generated_tokens=0,
                               occupancy_sum=0, peak_occupancy=0,
-                              host_syncs=0, prefix_tokens_reused=0)
+                              host_syncs=0, prefix_tokens_reused=0,
+                              param_swaps=0)
+        # Weight hot-swap handoff: (params, applied-event), installed by
+        # the engine thread at the top of its next step.
+        self._pending_swap: Optional[tuple[Any, threading.Event]] = None
         # EWMA decode-step microseconds per token: the routing signal a
         # load balancer uses to weigh this engine against its siblings.
         self._ewma_us_tok = 0.0
@@ -357,6 +361,46 @@ class ServeEngine:
             self._queue.put(_Request(prompt, mn, fut, time.monotonic()))
         self._wake.set()
         return fut
+
+    def swap_params(self, params, block: bool = True,
+                    timeout_s: float = 60.0) -> None:
+        """Hot-swap the model weights (a zero-downtime rollout's engine
+        half). The new tree is installed by the engine thread *between*
+        decode windows — admission and decode both see a consistent tree
+        for any one window, never a mix. Because params are a per-call
+        operand to every compiled executable, a shape/dtype-identical
+        swap reuses the entire warmed ladder: no recompile, no re-warm
+        cost (``EngineServer.load_version`` enforces shape identity by
+        restoring against the current tree).
+
+        With ``block=True`` (and a running engine thread) waits until the
+        swap has been applied. When the engine is driven by external
+        ``step()`` calls, the swap lands on the caller's next step.
+        """
+        done = threading.Event()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine stopped")
+            prev = self._pending_swap
+            self._pending_swap = (params, done)
+        if prev is not None:
+            prev[1].set()       # superseded before it was applied
+        self._wake.set()
+        if block and self._thread is not None:
+            if not done.wait(timeout_s):
+                raise TimeoutError("param swap not applied within "
+                                   f"{timeout_s}s")
+
+    def _apply_pending_swap(self) -> None:
+        with self._lock:
+            swap, self._pending_swap = self._pending_swap, None
+        if swap is None:
+            return
+        params, done = swap
+        self._params = params
+        with self._lock:
+            self._counters["param_swaps"] += 1
+        done.set()
 
     # -- page accounting (paged mode, engine thread only) --------------------
     def _page_need(self, prompt_len: int, max_new: int) -> int:
@@ -602,6 +646,7 @@ class ServeEngine:
         per *window* would stretch a chunked prompt's admission (and,
         under strict FCFS, everyone queued behind it) by the window
         length."""
+        self._apply_pending_swap()      # between windows, before admission
         progressed = False
         for _ in range(self._sync):
             progressed |= self._advance_chunk()
@@ -789,6 +834,10 @@ class ServeEngine:
         if self._thread is not None:
             self._thread.join(timeout=30)
             self._thread = None
+        with self._lock:
+            swap, self._pending_swap = self._pending_swap, None
+        if swap is not None:
+            swap[1].set()       # unblock a swap_params caller mid-stop
         err = RuntimeError("engine stopped")
         while True:
             try:
@@ -826,6 +875,14 @@ class ServeEngine:
         self.stop()
 
     # -- introspection -------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        """False once the engine has been stopped (or killed): new
+        submits and swaps fail — the health signal a serving wrapper
+        should report upward."""
+        with self._lock:
+            return not self._closed
+
     @property
     def num_slots(self) -> int:
         return self._ns

@@ -56,6 +56,19 @@ the router moves at runtime:
     it as a retry-later signal (see :func:`is_overloaded`, which unwraps
     the courier ``RemoteError`` envelope).
 
+  * **Rollout support**: a replica the registry marks *draining*
+    (``Registry.set_draining`` — registered and heartbeating, but being
+    taken out for a weight swap) stays in the table with its transport
+    open while new dispatches go to siblings, and it does not count
+    toward the Overloaded budget check. With ``set_canary(version,
+    fraction)`` the router pins that fraction of requests to replicas
+    reporting the canary model version (and steers the rest away from
+    it), and keeps **per-version** latency/error rows in ``stats()`` so
+    a RolloutController can compare old-vs-new percentiles before
+    promoting fleet-wide. Version pinning is a preference, not a wall:
+    if no replica of the wanted version is admissible, the request runs
+    on whatever is — a canary must never fail requests.
+
 The router is an ordinary ``CourierNode`` service: ``submit`` blocks its
 RPC handler thread for one reply, so the courier server's handler pool is
 the router's concurrency. Several routers can front the same registry;
@@ -109,6 +122,18 @@ def _is_timeout(exc: BaseException) -> bool:
     return isinstance(unwrap_remote(exc), (TimeoutError, cf.TimeoutError))
 
 
+def decorrelated_backoff(prev_s: float, rng, base_s: float = 0.005,
+                         cap_s: float = 0.5) -> float:
+    """Next sleep for an Overloaded retry: decorrelated jitter,
+    ``min(cap, U(base, 3*prev))``. When a drain momentarily drops capacity
+    by one replica, every client sees Overloaded at once; a fixed (or
+    deterministic-exponential) schedule has them all resubmit on the same
+    tick and re-stampede a fabric that just told them it is full. Jitter
+    spreads the retry wave; the 3x term still grows the mean under
+    sustained overload. ``rng`` is any object with ``uniform(a, b)``."""
+    return min(cap_s, rng.uniform(base_s, max(prev_s, base_s) * 3.0))
+
+
 @dataclasses.dataclass
 class _Replica:
     name: str
@@ -121,6 +146,15 @@ class _Replica:
     # (TTL eviction of a maybe-just-stalled replica): no new dispatches,
     # but the transport stays open until the last one resolves.
     draining: bool = False
+    # Registry-directed drain (rollout taking the replica out for a weight
+    # swap): still registered and heartbeating, transport open, but not a
+    # dispatch candidate until the mark clears.
+    undispatchable: bool = False
+
+    @property
+    def version(self) -> Optional[str]:
+        v = self.load.get("version")
+        return None if v is None else str(v)
 
     def budget(self, queue_slack: Optional[int]) -> int:
         slots = int(self.load.get("num_slots", 8)) or 8
@@ -178,6 +212,14 @@ class Router:
                               refreshes=0, dispatches=0, frames=0,
                               coalesced_calls=0, dispatch_us_sum=0.0)
         self._first_failover_done_s: Optional[float] = None
+        # Canary routing: (version, fraction) plus a fractional
+        # accumulator that meters out exactly `fraction` of requests to
+        # the canary version, deterministically (no sampling noise in the
+        # comparison rows). Per-version completion/latency/error rows use
+        # the same namespacing idea as the Meter's per_source percentiles.
+        self._canary: Optional[tuple[str, float]] = None
+        self._canary_acc = 0.0
+        self._per_version: dict[str, dict] = {}
 
         # Coalesced-dispatch state: (replica, call, caller future) triples
         # park here until the dispatcher thread drains them into
@@ -232,6 +274,7 @@ class Router:
                     missing.append(info)
                 else:
                     rep.load = dict(info["load"])
+                    rep.undispatchable = bool(info.get("draining", False))
         # Client construction does connect I/O (shm rendezvous probe, gRPC
         # channel) — never under the dispatch lock.
         built = []
@@ -240,7 +283,8 @@ class Router:
                 built.append(_Replica(
                     name=info["name"], endpoint=info["endpoint"],
                     client=self._client_factory(info["endpoint"]),
-                    load=dict(info["load"])))
+                    load=dict(info["load"]),
+                    undispatchable=bool(info.get("draining", False))))
             except Exception:  # noqa: BLE001 - endpoint unreachable
                 continue
         with self._lock:
@@ -289,13 +333,51 @@ class Router:
         except Exception:  # noqa: BLE001 - registry down: TTL will evict
             pass
 
+    # -- canary routing ------------------------------------------------------
+    def set_canary(self, version: Optional[Any],
+                   fraction: float = 0.0) -> None:
+        """Pin ``fraction`` of requests to replicas serving ``version``
+        (and steer the remainder away from it, so the per-version rows
+        compare clean populations). ``set_canary(None)`` clears."""
+        with self._lock:
+            if version is None or fraction <= 0:
+                self._canary = None
+            else:
+                self._canary = (str(version), min(float(fraction), 1.0))
+            self._canary_acc = 0.0
+
+    def _want_version(self) -> tuple[Optional[str], Optional[str]]:
+        """(want, avoid) version preference for one request under the
+        current canary split. Caller holds the lock."""
+        if self._canary is None:
+            return None, None
+        version, fraction = self._canary
+        self._canary_acc += fraction
+        if self._canary_acc >= 1.0:
+            self._canary_acc -= 1.0
+            return version, None
+        return None, version
+
+    def _version_row(self, version: Optional[str]) -> dict:
+        """Per-version accounting row. Caller holds the lock."""
+        key = version if version is not None else "unversioned"
+        row = self._per_version.get(key)
+        if row is None:
+            row = {"completed": 0, "errors": 0, "lat_sum_s": 0.0,
+                   "tokens": 0, "lats": collections.deque(maxlen=512)}
+            self._per_version[key] = row
+        return row
+
     # -- dispatch ------------------------------------------------------------
     def _pick(self, exclude: set[str]) -> Optional[_Replica]:
         """Least-loaded healthy replica under budget, or None. Raises
-        Overloaded when replicas exist but every one is at budget."""
+        Overloaded when replicas exist but every one is at budget.
+        Registry-draining replicas are not candidates and do not count
+        toward the budget check (a drain is planned capacity loss, not
+        congestion)."""
         with self._lock:
             candidates = [r for name, r in self._replicas.items()
-                          if name not in exclude]
+                          if name not in exclude and not r.undispatchable]
             if not candidates:
                 return None
             admissible = [r for r in candidates
@@ -305,6 +387,18 @@ class Router:
                 raise Overloaded(
                     f"all {len(candidates)} replicas at admission budget "
                     f"(in-flight {[r.inflight for r in candidates]})")
+            want, avoid = self._want_version()
+            if want is not None:
+                preferred = [r for r in admissible if r.version == want]
+            elif avoid is not None:
+                preferred = [r for r in admissible if r.version != avoid]
+            else:
+                preferred = admissible
+            # Preference, not a wall: an empty preferred set (canary
+            # draining, dead, or not up yet) falls back to anything
+            # admissible rather than failing the request.
+            if preferred:
+                admissible = preferred
             # Ties go to the replica dispatched least: equal scores
             # round-robin instead of pinning to dict order.
             best = min(admissible, key=lambda r: (r.score(), r.dispatched))
@@ -405,6 +499,7 @@ class Router:
         mid-decode. Raises :class:`Overloaded` when the fabric is full."""
         with self._lock:
             self._counters["submitted"] += 1
+        t_req = time.monotonic()
         deadline = time.monotonic() + self._startup_wait
         tried: set[str] = set()
         attempts = 0
@@ -454,6 +549,7 @@ class Router:
                     with self._lock:
                         self._counters["retries"] += 1
                         self._counters["failovers"] += 1
+                        self._version_row(rep.version)["errors"] += 1
                     continue
                 with self._lock:
                     self._counters["dispatches"] += 1
@@ -495,10 +591,24 @@ class Router:
                 with self._lock:
                     self._counters["retries"] += 1
                     self._counters["failovers"] += 1
+                    self._version_row(rep.version)["errors"] += 1
                 continue
             self._release(rep)
+            # Generated-token count, when the reply looks like a sequence
+            # ([S + n_generated] vs the [S] prompt) — powers the
+            # per-version us/token comparison the canary verdict reads.
+            try:
+                gen_tokens = max(len(out) - len(prompt), 1)
+            except TypeError:
+                gen_tokens = 1
             with self._lock:
                 self._counters["completed"] += 1
+                row = self._version_row(rep.version)
+                row["completed"] += 1
+                lat = time.monotonic() - t_req
+                row["lat_sum_s"] += lat
+                row["tokens"] += gen_tokens
+                row["lats"].append(lat)
                 if failed_over and self._first_failover_done_s is None:
                     # When the first request that had to fail over lands:
                     # the fabric's observable recovery point after a kill.
@@ -511,6 +621,8 @@ class Router:
     def health(self) -> dict:
         with self._lock:
             return {"status": "ok", "replicas": len(self._replicas),
+                    "dispatchable": sum(1 for r in self._replicas.values()
+                                        if not r.undispatchable),
                     "generation": self._generation}
 
     def load(self) -> dict:
@@ -527,8 +639,25 @@ class Router:
             s["replicas"] = {name: {"endpoint": r.endpoint,
                                     "inflight": r.inflight,
                                     "dispatched": r.dispatched,
+                                    "version": r.version,
+                                    "draining": r.undispatchable,
                                     "load": dict(r.load)}
                              for name, r in self._replicas.items()}
+            s["per_version"] = {}
+            for key, row in self._per_version.items():
+                lats = sorted(row["lats"])
+                n = len(lats)
+                s["per_version"][key] = {
+                    "completed": row["completed"],
+                    "errors": row["errors"],
+                    "mean_lat_us": 1e6 * row["lat_sum_s"]
+                                   / (row["completed"] or 1),
+                    "p50_lat_us": 1e6 * lats[n // 2] if n else 0.0,
+                    "p95_lat_us": 1e6 * lats[min(n - 1, int(n * 0.95))]
+                                  if n else 0.0,
+                    "us_per_token": 1e6 * row["lat_sum_s"]
+                                    / (row["tokens"] or 1),
+                }
         # Per dispatch *attempt* — the sum accrues once per dispatch (one
         # frame may carry many dispatches, so coalescing shows up here as a
         # lower per-call mean), and a request that failed over contributes

@@ -62,6 +62,63 @@ def test_no_tmp_dirs_left_behind(tmp_path):
     assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
 
 
+def test_publish_metadata_roundtrip(tmp_path):
+    mgr = checkpoint.CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree(jax.random.key(5))
+    meta = {"step": 7, "config_hash": "abc123", "eval": {"loss": 1.25}}
+    mgr.publish(7, tree, metadata=meta)
+    assert mgr.metadata(7) == meta
+    # ModelStore speaks versions over the same directory layout.
+    store = checkpoint.ModelStore(str(tmp_path))
+    assert store.versions() == [7]
+    assert store.latest_version() == 7
+    out = store.load_version(7, like=tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_never_deletes_retained_steps(tmp_path):
+    """A live-served version is pinned by retain_fn even when ``keep``
+    would age it out."""
+    mgr = checkpoint.CheckpointManager(str(tmp_path), keep=1,
+                                       retain_fn=lambda: {1})
+    tree = _tree(jax.random.key(6))
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [1, 3]      # 1 pinned, 2 collected
+
+
+def test_gc_deletes_nothing_when_retain_fn_raises(tmp_path):
+    def broken():
+        raise ConnectionError("registry down")
+
+    mgr = checkpoint.CheckpointManager(str(tmp_path), keep=1,
+                                       retain_fn=broken)
+    tree = _tree(jax.random.key(7))
+    for s in (1, 2):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [1, 2]      # fail safe: keep everything
+
+
+def test_half_written_checkpoint_is_skipped(tmp_path):
+    """A dir without a manifest (crash mid-write) is invisible to
+    ``all_steps``/``restore_latest`` and unloadable as a version."""
+    mgr = checkpoint.CheckpointManager(str(tmp_path), keep=5)
+    tree = _tree(jax.random.key(8))
+    mgr.save(1, tree, blocking=True)
+    # Simulate a crash: step 2 has leaves but no manifest.
+    half = tmp_path / "step_00000002"
+    half.mkdir()
+    (half / "leaf_00000.npy").write_bytes(b"garbage")
+    assert not checkpoint.is_complete(str(half))
+    assert mgr.all_steps() == [1]
+    step, out = mgr.restore_latest(tree)
+    assert step == 1 and out is not None
+    store = checkpoint.ModelStore(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        store.load_version(2, like=tree)
+
+
 def test_elastic_reshard_roundtrip(tmp_path):
     """Save under one mesh, restore under a different one (elastic)."""
     from repro.sharding.rules import param_sharding

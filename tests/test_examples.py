@@ -135,4 +135,67 @@ def test_serve_lm_failover_demo(tmp_path, capsys):
     assert summary["count"] == 6          # zero lost
     # Guard against a vacuous pass: the kill is count-triggered (after
     # the first served request), so it must have landed mid-run.
-    assert "chaos: killed one engine replica" in capsys.readouterr().out
+    assert "fault: kill -> target 0 fired" in capsys.readouterr().out
+
+
+def test_serve_lm_rollout_demo(tmp_path, capsys):
+    """The --rollout-after demo: mid-run the fleet rolls v0 -> v1 one
+    replica at a time; every request is served (zero lost) and the
+    rollout promotes."""
+    import json
+
+    import jax
+
+    from repro import configs
+    from repro.ckpt.checkpoint import ModelStore, config_hash
+    from repro.launch.serve import build_program
+    from repro.models import transformer
+    cfg = configs.get_reduced("qwen2-1.5b")
+    store_dir = str(tmp_path / "store")
+    store = ModelStore(store_dir)
+    for v in (0, 1):
+        store.publish_version(
+            v, transformer.init_params(cfg, jax.random.key(v)),
+            metadata={"step": v, "config_hash": config_hash(cfg)})
+    meter_json = str(tmp_path / "rollout_meter.json")
+    program = build_program(cfg, num_clients=2, requests_per_client=3,
+                            prompt_len=8, max_new=4, replicas=2, routers=1,
+                            meter_json=meter_json, registry_ttl_s=2.0,
+                            heartbeat_s=0.1, store_dir=store_dir,
+                            model_version=0, rollout=1, rollout_after=1)
+    lp.launch_and_wait(program, timeout_s=600)
+    summary = json.load(open(meter_json))
+    assert summary["count"] == 6          # zero lost across the roll
+    out = capsys.readouterr().out
+    assert "rollout: promoted -> v1" in out
+
+
+def test_meter_hold_gates_stop():
+    """A Meter stop-hold delays program stop past the last served
+    request until released — the rollout demo relies on this so a
+    late-scheduled RolloutDriver never races program teardown (its
+    registry lookup would find every courier service unregistered)."""
+    import threading
+
+    from repro.core.nodes.base import WorkerContext, set_current_context
+    from repro.launch.serve import Meter
+
+    stops = []
+    set_current_context(WorkerContext(
+        node_name="meter", stop_event=threading.Event(),
+        stop_program_fn=lambda: stops.append(True)))
+    try:
+        m = Meter(2, holds=1)
+        m.record(0.01, 4)
+        m.record(0.01, 4)
+        assert not stops              # count reached, hold still pending
+        m.release("rollout")
+        assert len(stops) == 1        # hold dropped -> stop fires
+
+        m2 = Meter(1, holds=1)        # release-before-done: record stops
+        m2.release("rollout")
+        assert len(stops) == 1
+        m2.record(0.01, 4)
+        assert len(stops) == 2
+    finally:
+        set_current_context(None)

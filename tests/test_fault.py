@@ -1,0 +1,195 @@
+"""fault.py primitives: restart policies, hedged_map paths, the launcher
+restart loop, and the FaultInjector's trigger machinery."""
+
+import threading
+import time
+from concurrent import futures as cf
+
+import pytest
+
+from repro import core as lp
+from repro.core.fault import (ALWAYS_RESTART, NO_RESTART, FaultEvent,
+                              FaultInjector, RestartPolicy, hedged_map)
+
+
+# -- RestartPolicy edges ------------------------------------------------------
+
+def test_backoff_grows_exponentially_and_caps():
+    p = RestartPolicy(backoff_s=0.1, backoff_multiplier=2.0, max_backoff_s=0.5)
+    assert p.backoff_for(0) == pytest.approx(0.1)
+    assert p.backoff_for(1) == pytest.approx(0.2)
+    assert p.backoff_for(2) == pytest.approx(0.4)
+    assert p.backoff_for(3) == pytest.approx(0.5)      # capped
+    assert p.backoff_for(50) == pytest.approx(0.5)     # no overflow blowup
+
+
+def test_allows_edges():
+    assert not NO_RESTART.allows(0)                    # fail fast
+    assert ALWAYS_RESTART.allows(10**6)                # restart forever
+    p = RestartPolicy(max_restarts=2)
+    assert p.allows(0) and p.allows(1)
+    assert not p.allows(2)
+
+
+# -- hedged_map ---------------------------------------------------------------
+
+def _resolved(value):
+    fut = cf.Future()
+    fut.set_result(value)
+    return fut
+
+
+def test_hedged_map_all_complete():
+    out = hedged_map([lambda v=v: _resolved(v) for v in range(4)])
+    assert out == [0, 1, 2, 3]
+
+
+def test_hedged_map_hedge_wins():
+    # First issue of fn[1] never resolves; the hedge re-issue resolves
+    # immediately — the hedged request must win and unblock the map.
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        return cf.Future() if calls["n"] == 1 else _resolved("hedged")
+
+    out = hedged_map([lambda: _resolved("fast"), flaky],
+                     hedge_after_s=0.05, timeout_s=5.0)
+    assert out == ["fast", "hedged"]
+    assert calls["n"] == 2
+
+
+def test_hedged_map_quorum_cancels_stragglers():
+    straggler = cf.Future()     # never resolves; quorum cancels it
+    out = hedged_map([lambda: _resolved("a"), lambda: _resolved("b"),
+                      lambda: straggler], quorum=2)
+    assert out == ["a", "b", None]
+    assert straggler.cancelled()
+
+
+def test_hedged_map_timeout_raises():
+    with pytest.raises(TimeoutError):
+        hedged_map([lambda: cf.Future()], timeout_s=0.1)
+
+
+def test_hedged_map_first_error_propagates():
+    boom = cf.Future()
+    boom.set_exception(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        hedged_map([lambda: _resolved(1), lambda: boom])
+
+
+# -- launcher restart-with-backoff -------------------------------------------
+
+class _FlakyNode:
+    """Crashes on its first ``fail_times`` constructions, then succeeds.
+    Module-level state keyed by tag: the launcher re-constructs the
+    object on every restart, so instance state would reset."""
+    attempts: dict = {}
+
+    def __init__(self, tag: str, fail_times: int):
+        n = _FlakyNode.attempts.get(tag, 0)
+        _FlakyNode.attempts[tag] = n + 1
+        if n < fail_times:
+            raise RuntimeError(f"flaky crash #{n}")
+
+    def run(self):
+        lp.stop_program()
+
+
+def test_thread_launcher_restarts_with_backoff():
+    _FlakyNode.attempts.clear()
+    p = lp.Program("flaky")
+    with p.group("w"):
+        p.add_node(lp.PyNode(_FlakyNode, "a", 2))
+    launcher = lp.ThreadLauncher(
+        per_group_restart={"w": RestartPolicy(max_restarts=3,
+                                             backoff_s=0.01)})
+    t0 = time.monotonic()
+    launcher.launch(p)
+    assert launcher.wait(timeout=10)
+    assert _FlakyNode.attempts["a"] == 3          # 2 crashes + 1 success
+    failures = launcher.failures
+    assert len(failures) == 2
+    assert all(not f.fatal for f in failures)
+    assert time.monotonic() - t0 >= 0.01 + 0.02   # backoffs were honored
+
+
+def test_thread_launcher_fatal_after_restart_budget():
+    _FlakyNode.attempts.clear()
+    p = lp.Program("doomed")
+    with p.group("w"):
+        p.add_node(lp.PyNode(_FlakyNode, "b", 99))
+    launcher = lp.ThreadLauncher(
+        per_group_restart={"w": RestartPolicy(max_restarts=1,
+                                             backoff_s=0.01)})
+    launcher.launch(p)
+    assert launcher.wait(timeout=10)
+    assert any(f.fatal for f in launcher.failures)
+    assert _FlakyNode.attempts["b"] == 2          # initial + 1 restart
+
+
+# -- FaultInjector ------------------------------------------------------------
+
+class _Target:
+    def __init__(self):
+        self.calls = []
+        self.dead = False
+
+    def kill(self):
+        if self.dead:
+            raise ConnectionError("already dead")
+        self.dead = True
+        self.calls.append(("kill",))
+
+    def stall(self, seconds):
+        self.calls.append(("stall", seconds))
+
+    def drop(self, seconds):
+        self.calls.append(("drop", seconds))
+
+
+class _Progress:
+    def __init__(self):
+        self.completed = 0
+
+    def stats(self):
+        return {"completed": self.completed}
+
+
+def test_fault_injector_count_trigger():
+    target, progress = _Target(), _Progress()
+    inj = FaultInjector([FaultEvent(kind="kill", after_served=5)],
+                        [target], progress=[progress])
+    assert inj.poll() == 1                # 0 served: not due
+    assert target.calls == []
+    progress.completed = 5
+    assert inj.poll() == 0
+    assert target.calls == [("kill",)]
+    assert inj.fired[0]["error"] is None
+
+
+def test_fault_injector_time_and_predicate_triggers():
+    target = _Target()
+    gate = threading.Event()
+    inj = FaultInjector(
+        [FaultEvent(kind="stall", after_s=0.02, duration_s=1.5),
+         FaultEvent(kind="drop", when=gate.is_set, duration_s=0.5)],
+        [target])
+    inj.poll()
+    assert target.calls == []             # neither due yet
+    time.sleep(0.03)
+    assert inj.poll() == 1                # stall fired, drop waiting
+    assert target.calls == [("stall", 1.5)]
+    gate.set()
+    assert inj.poll() == 0
+    assert target.calls == [("stall", 1.5), ("drop", 0.5)]
+
+
+def test_fault_injector_records_failed_fire():
+    target = _Target()
+    target.dead = True                    # kill() raises
+    inj = FaultInjector([FaultEvent(kind="kill")], [target])
+    assert inj.poll() == 0                # fired (best-effort), not pending
+    assert inj.fired[0]["error"] is not None
+    assert target.calls == []
