@@ -14,6 +14,7 @@ workflows can share or alternate files without clobbering each other.
   * kernels       — Pallas kernels (interpret) vs oracles + analytic bytes
   * roofline      — per-cell roofline terms from the dry-run artifacts
   * serve         — continuous-batching vs lockstep serving A/B
+  * train         — elastic training fabric chaos arms (kill/shrink/grow)
 """
 
 from __future__ import annotations
@@ -24,13 +25,14 @@ import os
 import sys
 
 SUITES = ("rpc_overhead", "replay", "kernels", "param_server", "roofline",
-          "serve")
+          "serve", "train")
 
 # Row-name prefix -> suite, for JSON files written before rows carried an
 # explicit "suite" field.
 _PREFIX_SUITE = {"rpc/": "rpc_overhead", "replay/": "replay",
                  "kernel/": "kernels", "ps/": "param_server",
-                 "roofline/": "roofline", "serve/": "serve"}
+                 "roofline/": "roofline", "serve/": "serve",
+                 "train/": "train"}
 
 _rows: list[dict] = []
 _suite: list[str] = ["?"]
@@ -107,6 +109,9 @@ def main(argv=None) -> None:
     if begin("serve"):
         from benchmarks import serve_bench
         serve_bench.run(_emit)
+    if begin("train"):
+        from benchmarks import train_bench
+        train_bench.run(_emit)
 
     if args.json:
         _write_json(args.json, only & set(SUITES))

@@ -1,0 +1,341 @@
+"""Elastic training-fabric benchmark: worker churn with bounded step loss.
+
+Paired arms over the SAME toy task (4->16->1 tanh MLP regression on a
+fixed target function), the same fleet shape (replay + 2 actors +
+learners), and the same step budget — the only variable is the fault
+schedule:
+
+  * ``baseline``       — static 2-learner fleet, no faults. The loss and
+      wall-clock reference the chaos arms are paired against.
+  * ``kill_actor``     — one actor is killed mid-run. Actors are
+      stateless (paper §6): the supervisor respawns it, the learner set
+      never blinks, and the gate is ZERO lost steps (the chief is never
+      restored, so its start_step stays 0).
+  * ``kill_learner``   — the CHIEF learner is killed mid-run. The
+      respawned chief restores the latest *published* ModelStore version,
+      so the gate is step loss <= the publish interval (steps lost =
+      step at kill - restored start step).
+  * ``elastic_shrink`` — the learner set is resized 2 -> 1 mid-run
+      (graceful retire). Training continues on the survivor; the final
+      loss is paired against baseline in the derived column.
+  * ``elastic_grow``   — 1 -> 2 mid-run: the grown learner restores the
+      latest published version in its ctor and joins the quorum.
+  * ``compressed``     — baseline fleet forced onto the int8
+      error-feedback gradient wire format (the >= 4x wire shrink path
+      big models select by size); pairs loss against dense baseline.
+
+Rows (us_per_call column):
+  train/{arm}/step        — wall-clock microseconds per training step
+                            (includes spawn + jit; arms pay it equally)
+  train/{arm}/final_loss  — chief's loss at the last step (x1e6 scale is
+                            not applied: the value IS the loss)
+  train/kill_actor/lost_steps    — CI gates == 0
+  train/kill_learner/step_loss   — CI gates <= publish_every
+  train/kill_learner/recovery_s  — kill -> respawned chief live, seconds
+
+``REPRO_SMOKE=1`` halves the step budget. A timed-out arm emits the -1
+sentinel in its gate row so CI fails loudly instead of reading a hung
+fleet as a perfect run.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+SMOKE = os.environ.get("REPRO_SMOKE", "") == "1"
+
+
+def _target(x):
+    return np.sin(x[:, 0]) + 0.5 * x[:, 1] - 0.2 * x[:, 2] * x[:, 3]
+
+
+def _rollout(params, rng):
+    x = rng.normal(size=(8, 4)).astype(np.float32)
+    return {"x": x, "y": _target(x).astype(np.float32)}
+
+
+class _Fleet:
+    """One in-process training fabric: registry + replay + actors +
+    learners on a ThreadWorkerSpawner, driven by polling the supervisor
+    (the bench owns the loop so chaos events can fire at exact steps)."""
+
+    def __init__(self, *, learners: int, actors: int, total_steps: int,
+                 publish_every: int, strategy: str = "auto"):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.discovery import Registry
+        from repro.core.fault import RestartPolicy
+        from repro.data.replay import TableConfig
+        from repro.train import fabric
+        from repro.train.optimizer import OptimizerConfig
+
+        class ToyTask:
+            optimizer = OptimizerConfig(lr=0.03, warmup_steps=0,
+                                        total_steps=1_000_000,
+                                        weight_decay=0.0, clip_norm=None)
+
+            def init_params(self, key):
+                k1, k2 = jax.random.split(key)
+                return {"w1": jax.random.normal(k1, (4, 16)) * 0.5,
+                        "b1": jnp.zeros((16,)),
+                        "w2": jax.random.normal(k2, (16, 1)) * 0.5,
+                        "b2": jnp.zeros((1,))}
+
+            def grad_fn(self, params, batch):
+                def loss(p):
+                    h = jnp.tanh(batch["x"] @ p["w1"] + p["b1"])
+                    pred = (h @ p["w2"] + p["b2"])[:, 0]
+                    return jnp.mean((pred - batch["y"]) ** 2)
+                return jax.value_and_grad(loss)(params)
+
+            def collate(self, items):
+                return {"x": np.concatenate([it["x"] for it in items]),
+                        "y": np.concatenate([it["y"] for it in items])}
+
+        self._fabric = fabric
+        self.store_dir = tempfile.mkdtemp(prefix="train_bench-")
+        self.registry = Registry(ttl_s=1.0)
+        self.spawner = fabric.ThreadWorkerSpawner()
+        self.cfg = fabric.FabricConfig(
+            total_steps=total_steps, batch_size=4,
+            publish_every=publish_every, grad_strategy=strategy,
+            peer_timeout_s=5.0, heartbeat_s=0.1, insert_timeout_s=0.5,
+            sample_timeout_s=0.5)
+        task = ToyTask()
+        table = TableConfig(name="batches", max_size=500,
+                            min_size_to_sample=8, samples_per_insert=4.0,
+                            spi_tolerance=8.0)
+        resolver = fabric.registry_resolver(self.registry, "replay")
+        cfg, registry, spawner = self.cfg, self.registry, self.spawner
+        store_dir = self.store_dir
+
+        def spawn_fn(name):
+            role, idx = name.rsplit("-", 1)
+            if role == "replay":
+                spawner.spawn(name, lambda n, ep: fabric.ReplayService(
+                    [table], registry, name=n, endpoint=ep,
+                    heartbeat_s=cfg.heartbeat_s))
+            elif role == "learner":
+                batch_fn = fabric.replay_batch_fn(
+                    resolver, "batches", task.collate, cfg.batch_size,
+                    cfg.sample_timeout_s)
+                spawner.spawn(name, lambda n, ep, i=int(idx):
+                              fabric.LearnerWorker(
+                                  task, batch_fn, store_dir, registry, cfg,
+                                  name=n, chief=(i == 0), endpoint=ep))
+            elif role == "actor":
+                spawner.spawn(name, lambda n, ep, i=int(idx):
+                              fabric.ActorWorker(
+                                  task, _rollout, resolver, "batches",
+                                  store_dir, registry, cfg, name=n,
+                                  endpoint=ep, seed=100 + i))
+            else:
+                raise ValueError(name)
+
+        self.sup = fabric.TrainSupervisor(
+            self.registry, spawn_fn,
+            expected={"replay": 1, "actor": actors, "learner": learners},
+            policy=RestartPolicy(max_restarts=8, backoff_s=0.02),
+            spawn_grace_s=10.0, total_steps=total_steps)
+
+    def chief(self):
+        for r in self.registry.lookup()["replicas"]:
+            load = r["load"]
+            if load.get("role") == "learner" and load.get("chief"):
+                return load
+        return None
+
+    def kill(self, name: str) -> None:
+        self._fabric.RegistryTarget(self.registry, name).kill()
+
+    def versions(self):
+        from repro.ckpt.checkpoint import ModelStore
+        return ModelStore(self.store_dir).versions()
+
+    def close(self) -> None:
+        self.spawner.stop_all()
+
+
+def _drive(fleet: _Fleet, events=(), timeout_s: float = 240.0):
+    """Poll the supervisor to completion, firing each ``(trigger_step,
+    fn)`` once when the chief's reported step first reaches the trigger.
+    Returns (done, elapsed_s, final_chief_load, loss_curve)."""
+    t0 = time.monotonic()
+    fired = [False] * len(events)
+    curve: list[tuple[float, int, float, int]] = []  # (t, step, loss, start)
+    last = None
+    while time.monotonic() - t0 < timeout_s:
+        fleet.sup.poll()
+        load = fleet.chief()
+        if load is not None:
+            last = load
+            if load.get("loss") is not None and (
+                    not curve or (curve[-1][1], curve[-1][3])
+                    != (load["step"], load["start_step"])):
+                curve.append((time.monotonic(), load["step"], load["loss"],
+                              load["start_step"]))
+            for i, (trig, fn) in enumerate(events):
+                if not fired[i] and load["step"] >= trig:
+                    fired[i] = True
+                    fn()
+        if fleet.sup.done:
+            return True, time.monotonic() - t0, last, curve
+        time.sleep(0.02)
+    return False, time.monotonic() - t0, last, curve
+
+
+def _late_loss(curve, total: int) -> float:
+    tail = [loss for _, step, loss, _ in curve if step >= int(0.8 * total)]
+    return float(np.mean(tail)) if tail else float("nan")
+
+
+def run(emit) -> None:
+    total = 40 if SMOKE else 80
+    publish_every = 10
+    # Kill the chief mid-publish-interval (not on a boundary) so the arm
+    # shows a bounded-but-nonzero regression to the last published step.
+    mid = total // 2 + 3
+
+    # --- baseline: static 2-learner fleet ---------------------------------
+    fleet = _Fleet(learners=2, actors=2, total_steps=total,
+                   publish_every=publish_every)
+    done, elapsed, load, curve = _drive(fleet)
+    fleet.close()
+    base_loss = _late_loss(curve, total)
+    emit("train/baseline/step", 1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f},learners=2,actors=2,"
+         f"publish_every={publish_every},n={total}")
+    emit("train/baseline/final_loss", base_loss if done else -1.0,
+         f"late-window mean over steps >= {int(0.8*total)}")
+
+    # --- kill one actor: stateless, zero lost steps -----------------------
+    fleet = _Fleet(learners=2, actors=2, total_steps=total,
+                   publish_every=publish_every)
+    fleet_ref = fleet
+
+    def _kill_actor():
+        fleet_ref.kill("actor-0")
+    done, elapsed, load, curve = _drive(fleet, [(total // 3, _kill_actor)])
+    # The toy fleet can finish before the dead actor's TTL eviction lands;
+    # keep polling briefly so the arm asserts the detect->respawn cycle
+    # instead of passing vacuously.
+    t_cap = time.monotonic() + 5.0
+    while (done and not fleet.sup.stats()["restarts"].get("actor-0")
+           and time.monotonic() < t_cap):
+        fleet.sup.poll()
+        time.sleep(0.02)
+    stats = fleet.sup.stats()
+    fleet.close()
+    # Actors are stateless: the learner set must never blink. Lost steps
+    # = the chief's restore regression (start_step stays 0 when it was
+    # never restored); learner respawns are surfaced alongside.
+    learner_restarts = sum(v for k, v in stats["restarts"].items()
+                           if k.startswith("learner"))
+    lost = load["start_step"] + learner_restarts if done else None
+    emit("train/kill_actor/step", 1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f}")
+    emit("train/kill_actor/lost_steps",
+         float(lost) if lost is not None else -1.0,
+         f"actor_respawns={stats['restarts'].get('actor-0', 0)},"
+         f"learner_respawns={learner_restarts},"
+         f"chief_start={load['start_step'] if load else '?'} "
+         "(CI gates == 0)")
+
+    # --- kill the chief learner: bounded step loss ------------------------
+    fleet = _Fleet(learners=2, actors=2, total_steps=total,
+                   publish_every=publish_every)
+    fleet_ref2 = fleet
+    kill_info = {}
+
+    def _kill_chief():
+        kill_info["step"] = fleet_ref2.chief()["step"]
+        kill_info["t"] = time.monotonic()
+        fleet_ref2.kill("learner-0")
+    done, elapsed, load, curve = _drive(fleet, [(mid, _kill_chief)])
+    stats = fleet.sup.stats()
+    fleet.close()
+    if done and stats["restarts"].get("learner-0", 0) >= 1:
+        step_loss = kill_info["step"] - load["start_step"]
+        # Recovery: kill -> the respawned chief's first registry report
+        # (identified by its restored, non-zero start_step).
+        t_back = next((t for t, _, _, start in curve
+                       if t > kill_info["t"] and start > 0), None)
+        recovery_s = (t_back - kill_info["t"]) if t_back else -1e-6
+    else:
+        step_loss = None                      # kill missed: fail loudly
+        recovery_s = -1e-6
+    emit("train/kill_learner/step", 1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f}")
+    emit("train/kill_learner/step_loss",
+         float(step_loss) if step_loss is not None else -1.0,
+         f"killed_at={kill_info.get('step')},restored_start="
+         f"{load['start_step'] if load else '?'},"
+         f"publish_every={publish_every},"
+         f"respawns={stats['restarts'].get('learner-0', 0)} "
+         f"(CI gates <= {publish_every})")
+    emit("train/kill_learner/recovery_s", recovery_s * 1e6,
+         f"{recovery_s*1e3:.0f}ms kill -> restored chief reporting"
+         if recovery_s >= 0 else "SENTINEL: chief respawn not observed")
+
+    # --- elastic shrink 2 -> 1 -------------------------------------------
+    fleet = _Fleet(learners=2, actors=2, total_steps=total,
+                   publish_every=publish_every)
+    fleet_ref3 = fleet
+    done, elapsed, load, curve = _drive(
+        fleet, [(total // 3, lambda: fleet_ref3.sup.scale("learner", 1))])
+    fleet.close()
+    shrink_loss = _late_loss(curve, total)
+    emit("train/elastic_shrink/step",
+         1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f},2->1 at step {total//3}")
+    emit("train/elastic_shrink/final_loss",
+         shrink_loss if done else -1.0,
+         f"delta_vs_baseline={shrink_loss-base_loss:+.4f}")
+
+    # --- elastic grow 1 -> 2 ---------------------------------------------
+    fleet = _Fleet(learners=1, actors=2, total_steps=total,
+                   publish_every=publish_every)
+    fleet_ref4 = fleet
+    done, elapsed, load, curve = _drive(
+        fleet, [(total // 3, lambda: fleet_ref4.sup.scale("learner", 2))])
+    stats = fleet.sup.stats()
+    fleet.close()
+    grow_loss = _late_loss(curve, total)
+    emit("train/elastic_grow/step", 1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f},1->2 at step {total//3},"
+         f"expected={stats['expected']}")
+    emit("train/elastic_grow/final_loss", grow_loss if done else -1.0,
+         f"delta_vs_baseline={grow_loss-base_loss:+.4f}")
+
+    # --- compressed gradient wire (int8 + error feedback) -----------------
+    from repro.train import grad_compression
+    fleet = _Fleet(learners=2, actors=2, total_steps=total,
+                   publish_every=publish_every, strategy="int8_ef")
+    done, elapsed, load, curve = _drive(fleet)
+    fleet.close()
+    comp_loss = _late_loss(curve, total)
+    # Wire shrink on this task's gradient tree (int8 q + fp32 scale/tensor).
+    import jax
+    probe = {"w1": np.zeros((4, 16), np.float32),
+             "b1": np.zeros((16,), np.float32),
+             "w2": np.zeros((16, 1), np.float32),
+             "b2": np.zeros((1,), np.float32)}
+    dense_b = grad_compression.grad_bytes(probe)
+    payload, _ = grad_compression.compress_tree(probe, None, method="int8_ef")
+    int8_b = sum(q.nbytes for q in jax.tree.leaves(payload["q"])) + \
+        sum(s.nbytes for s in jax.tree.leaves(payload["scale"]))
+    emit("train/compressed/step", 1e6 * elapsed / total if done else -1.0,
+         f"steps_per_s={total/elapsed:.1f},strategy=int8_ef,"
+         f"wire_bytes={int8_b}/{dense_b}")
+    emit("train/compressed/final_loss", comp_loss if done else -1.0,
+         f"delta_vs_baseline={comp_loss-base_loss:+.4f}")
+
+
+if __name__ == "__main__":
+    def _print(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}")
+    run(_print)

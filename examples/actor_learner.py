@@ -1,18 +1,30 @@
-"""Distributed actor–learner RL (paper §5.4, Listings 7/11).
+"""Distributed actor–learner RL (paper §5.4, Listings 7/11) — on the
+elastic training fabric.
 
 Actors interact with a toy environment and push trajectories into a
-ReverbNode table (rate-limited, paper §4.2 "data services"); a Learner
-samples batches, runs a JAX policy-gradient step, and serves parameters
-back to the actors — the exact topology of the paper with our replay
-substrate underneath.
+registry-advertised replay service; learners sample batches and run a JAX
+policy-gradient step. Unlike the original topology (actors fetch params
+from the learner over ad-hoc RPC), everything here rides the fabric's
+survival story:
+
+  * the learner publishes params to a versioned ModelStore — actors pull
+    consistent snapshots and a respawned learner resumes from the last
+    published version (step loss <= --publish-every);
+  * every worker heartbeats through the Registry; a TrainSupervisor
+    respawns whoever dies under RestartPolicy backoff;
+  * replay inserts carry a deadline — a dead learner surfaces to actors
+    as a typed WriterStalled, and they re-resolve instead of deadlocking.
 
 Environment: 1-D "target chase" — state is (pos, target); reward is
 -|pos-target|; actions move ±1/0. Learnable in a few hundred steps.
 
     PYTHONPATH=src python examples/actor_learner.py --steps 150
+    PYTHONPATH=src python examples/actor_learner.py --actors 4 --learners 2
+    PYTHONPATH=src python examples/actor_learner.py --kill-after 2
 """
 
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -20,14 +32,17 @@ import numpy as np
 
 from repro import core as lp
 from repro.data.replay import TableConfig
+from repro.train import fabric
+from repro.train.optimizer import OptimizerConfig
 
 GRID = 8
 ACTIONS = 3  # left, stay, right
+EPISODE_LEN = 16
 
 
 class ChaseEnv:
-    def __init__(self, seed):
-        self._rng = np.random.default_rng(seed)
+    def __init__(self, rng):
+        self._rng = rng
         self.reset()
 
     def reset(self):
@@ -49,109 +64,154 @@ def policy_logits(params, obs):
     return h @ params["w2"] + params["b2"]
 
 
-class Actor:
-    def __init__(self, learner, replay, seed, episode_len=16):
-        self._learner = learner
-        self._replay = replay
-        self._env = ChaseEnv(seed)
-        self._rng = np.random.default_rng(seed + 1)
-        self._episode_len = episode_len
+class PGTask:
+    """Fabric task: REINFORCE on batches of trajectories."""
 
-    def run(self):
-        ctx = lp.get_current_context()
-        params = self._learner.get_params()
-        while not ctx.should_stop:
-            obs = self._env.reset()
-            traj_obs, traj_act, traj_rew = [], [], []
-            for _ in range(self._episode_len):
-                logits = np.asarray(policy_logits(
-                    jax.tree.map(jnp.asarray, params), jnp.asarray(obs)))
-                probs = np.exp(logits - logits.max())
-                probs /= probs.sum()
-                action = int(self._rng.choice(ACTIONS, p=probs))
-                traj_obs.append(obs)
-                traj_act.append(action)
-                obs, reward = self._env.step(action)
-                traj_rew.append(reward)
-            ok = self._replay.insert("trajectories", {
-                "obs": np.stack(traj_obs), "act": np.array(traj_act),
-                "rew": np.array(traj_rew, np.float32)}, timeout=5.0)
-            if ok:
-                params = self._learner.get_params()  # periodic param fetch
+    optimizer = OptimizerConfig(lr=0.05, warmup_steps=0, total_steps=100_000,
+                                weight_decay=0.0, clip_norm=None)
 
-
-class Learner:
-    def __init__(self, replay, steps=150, batch_size=8, lr=0.05):
-        self._replay = replay
-        self._steps = steps
-        self._batch = batch_size
-        key = jax.random.key(0)
+    def init_params(self, key):
         k1, k2 = jax.random.split(key)
-        self._params = {
-            "w1": jax.random.normal(k1, (2, 32)) * 0.5,
-            "b1": jnp.zeros((32,)),
-            "w2": jax.random.normal(k2, (32, ACTIONS)) * 0.5,
-            "b2": jnp.zeros((ACTIONS,)),
-        }
-        self._lr = lr
-        self._update = jax.jit(self._pg_step)
+        return {"w1": jax.random.normal(k1, (2, 32)) * 0.5,
+                "b1": jnp.zeros((32,)),
+                "w2": jax.random.normal(k2, (32, ACTIONS)) * 0.5,
+                "b2": jnp.zeros((ACTIONS,))}
 
-    def _pg_step(self, params, obs, act, ret):
+    def grad_fn(self, params, batch):
         def loss_fn(p):
-            logits = policy_logits(p, obs)          # [B, T, A]
+            logits = policy_logits(p, batch["obs"])      # [B, T, A]
             logp = jax.nn.log_softmax(logits)
-            chosen = jnp.take_along_axis(logp, act[..., None], -1)[..., 0]
-            adv = ret - ret.mean()
+            chosen = jnp.take_along_axis(
+                logp, batch["act"][..., None], -1)[..., 0]
+            adv = batch["ret"] - batch["ret"].mean()
             return -(chosen * adv).mean()
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params = jax.tree.map(lambda p, g: p - self._lr * g, params, grads)
-        return params, loss
+        return jax.value_and_grad(loss_fn)(params)
 
-    def get_params(self):
-        return jax.tree.map(np.asarray, self._params)
+    def collate(self, items):
+        rew = np.stack([it["rew"] for it in items])
+        ret = rew[..., ::-1].cumsum(-1)[..., ::-1].copy()
+        return {"obs": np.stack([it["obs"] for it in items]),
+                "act": np.stack([it["act"] for it in items]),
+                "ret": ret.astype(np.float32)}
+
+
+def rollout(params, rng):
+    """One episode under the current policy -> one replay item. Params are
+    host numpy (pulled from the ModelStore), so act with numpy directly."""
+    env = ChaseEnv(rng)
+    obs = env.reset()
+    traj_obs, traj_act, traj_rew = [], [], []
+    for _ in range(EPISODE_LEN):
+        h = np.tanh(obs @ params["w1"] + params["b1"])
+        logits = h @ params["w2"] + params["b2"]
+        probs = np.exp(logits - logits.max())
+        probs /= probs.sum()
+        action = int(rng.choice(ACTIONS, p=probs))
+        traj_obs.append(obs)
+        traj_act.append(action)
+        obs, reward = env.step(action)
+        traj_rew.append(reward)
+    return {"obs": np.stack(traj_obs), "act": np.array(traj_act),
+            "rew": np.array(traj_rew, np.float32)}
+
+
+class Fleet:
+    """PyNode hosting the worker fleet on a ThreadWorkerSpawner, supervised
+    by a TrainSupervisor until the chief learner reports done."""
+
+    def __init__(self, registry, store_dir, num_actors, num_learners,
+                 cfg: fabric.FabricConfig):
+        self._registry = registry
+        self._store_dir = store_dir
+        self._actors = num_actors
+        self._learners = num_learners
+        self._cfg = cfg
 
     def run(self):
-        returns = []
-        for step in range(self._steps):
-            batch = self._replay.sample("trajectories", self._batch,
-                                        timeout=30.0)
-            if batch is None:
-                print("learner: replay timed out")
-                break
-            obs = jnp.asarray(np.stack([b["obs"] for b in batch]))
-            act = jnp.asarray(np.stack([b["act"] for b in batch]))
-            rew = np.stack([b["rew"] for b in batch])
-            ret = jnp.asarray((rew[..., ::-1].cumsum(-1)[..., ::-1]).copy())
-            self._params, loss = self._update(self._params, obs, act, ret)
-            returns.append(float(rew.sum(-1).mean()))
-            if step % 25 == 0 or step == self._steps - 1:
-                print(f"step {step:4d} loss={float(loss):7.4f} "
-                      f"mean_episode_return={np.mean(returns[-25:]):7.3f}")
-        early = np.mean(returns[:20])
-        late = np.mean(returns[-20:])
-        print(f"return improved {early:.3f} -> {late:.3f}")
-        lp.stop_program()
+        spawner = fabric.ThreadWorkerSpawner()
+        task = PGTask()
+        cfg = self._cfg
+        table = TableConfig("trajectories", max_size=2000, sampler="uniform",
+                            min_size_to_sample=8)
+        resolver = fabric.registry_resolver(self._registry, "replay")
+
+        def spawn_fn(name):
+            role, idx = name.rsplit("-", 1)
+            if role == "replay":
+                spawner.spawn(name, lambda n, ep: fabric.ReplayService(
+                    [table], self._registry, name=n, endpoint=ep,
+                    heartbeat_s=cfg.heartbeat_s))
+            elif role == "learner":
+                batch_fn = fabric.replay_batch_fn(
+                    resolver, "trajectories", task.collate, cfg.batch_size,
+                    cfg.sample_timeout_s)
+                spawner.spawn(name, lambda n, ep: fabric.LearnerWorker(
+                    task, batch_fn, self._store_dir, self._registry, cfg,
+                    name=n, chief=(int(idx) == 0), endpoint=ep))
+            elif role == "actor":
+                spawner.spawn(name, lambda n, ep, i=int(idx):
+                              fabric.ActorWorker(
+                                  task, rollout, resolver, "trajectories",
+                                  self._store_dir, self._registry, cfg,
+                                  name=n, endpoint=ep, seed=100 + i))
+            else:
+                raise ValueError(name)
+
+        sup = fabric.TrainSupervisor(
+            self._registry, spawn_fn,
+            expected={"replay": 1, "actor": self._actors,
+                      "learner": self._learners},
+            policy=lp.RestartPolicy(max_restarts=5, backoff_s=0.05),
+            spawn_grace_s=15.0, total_steps=cfg.total_steps)
+        try:
+            sup.run()
+        finally:
+            for r in self._registry.lookup()["replicas"]:
+                load = r["load"]
+                if load.get("role") == "learner" and load.get("chief"):
+                    print(f"chief done: step={load['step']} "
+                          f"loss={load['loss']:.4f} v={load['version']}")
+            spawner.stop_all()
 
 
-def build(num_actors=4, steps=150) -> lp.Program:
+def build(num_actors=4, steps=150, num_learners=1, publish_every=10,
+          kill_after=None, ckpt_dir=None) -> lp.Program:
+    ckpt_dir = ckpt_dir or tempfile.mkdtemp(prefix="actor_learner_")
+    cfg = fabric.FabricConfig(
+        total_steps=steps, batch_size=8, publish_every=publish_every,
+        peer_timeout_s=10.0, heartbeat_s=0.2, insert_timeout_s=1.0,
+        sample_timeout_s=1.0)
     p = lp.Program("actor-learner")
-    replay = p.add_node(lp.ReverbNode([TableConfig(
-        "trajectories", max_size=2000, sampler="uniform",
-        min_size_to_sample=8)]))
-    with p.group("learner"):
-        learner = p.add_node(lp.CourierNode(Learner, replay, steps=steps))
-    with p.group("actor"):
-        for i in range(num_actors):
-            p.add_node(lp.CourierNode(Actor, learner, replay, seed=i))
+    with p.group("registry"):
+        registry = p.add_node(lp.CourierNode(lp.Registry, ttl_s=10.0))
+    with p.group("fleet"):
+        p.add_node(lp.PyNode(Fleet, registry, ckpt_dir, num_actors,
+                             num_learners, cfg))
+    if kill_after is not None:
+        with p.group("chaos"):
+            p.add_node(lp.PyNode(
+                fabric.ChaosNode, registry,
+                [("kill", "learner-0", kill_after, 0.0)]))
     return p
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--actors", type=int, default=4)
+    ap.add_argument("--learners", type=int, default=1)
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--publish-every", type=int, default=10)
+    ap.add_argument("--kill-after", type=float, default=None,
+                    help="chaos demo: kill the chief learner this many "
+                         "seconds after it comes up; the supervisor "
+                         "restores it from the last published version")
+    ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
-    lp.launch_and_wait(build(args.actors, args.steps), timeout_s=600)
+    lp.launch_and_wait(
+        build(args.actors, args.steps, num_learners=args.learners,
+              publish_every=args.publish_every, kill_after=args.kill_after,
+              ckpt_dir=args.ckpt_dir),
+        timeout_s=600)
 
 
 if __name__ == "__main__":

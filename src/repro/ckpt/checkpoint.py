@@ -79,8 +79,16 @@ def save(tree, directory: str, metadata: Optional[dict] = None,
     tmp dir, and the parent dir around the rename — required for published
     model versions that must survive machine crash, optional for periodic
     train checkpoints where losing the very last one is acceptable.
+
+    Concurrent writers of the *same* directory are safe (last writer
+    wins): each writes its own uniquely-named tmp dir, and the rename
+    dance retries around a sibling landing first. This happens in chaos
+    recovery — a killed learner's in-flight publish can overlap its
+    replacement's publish of the same step; both trees are complete
+    states, so either winning is correct.
     """
-    tmp = directory + ".tmp"
+    tag = f".tmp.{os.getpid()}.{threading.get_ident()}"
+    tmp = directory + tag
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
@@ -112,19 +120,24 @@ def save(tree, directory: str, metadata: Optional[dict] = None,
             os.fsync(f.fileno())
     if durable:
         _fsync_dir(tmp)
-    if os.path.exists(directory):
-        # Overwrite dance: park the old dir aside so there is never a
-        # moment where ``directory`` exists half-built. If we crash after
-        # the rmtree-equivalent below, readers see either old or new —
-        # never a partial mix.
-        trash = directory + ".old"
-        if os.path.exists(trash):
-            shutil.rmtree(trash)
-        os.rename(directory, trash)
-        os.replace(tmp, directory)
-        shutil.rmtree(trash, ignore_errors=True)
+    # Overwrite dance: park any existing dir aside so there is never a
+    # moment where ``directory`` exists half-built — readers see either
+    # old or new, never a partial mix. Retried because a concurrent
+    # publisher of the same step may land between our park and replace.
+    for attempt in range(8):
+        try:
+            os.replace(tmp, directory)   # succeeds iff directory absent
+            break
+        except OSError:
+            trash = directory + f".old{tag}.{attempt}"
+            try:
+                os.rename(directory, trash)
+            except FileNotFoundError:
+                continue                 # sibling already parked it
+            shutil.rmtree(trash, ignore_errors=True)
     else:
-        os.replace(tmp, directory)
+        raise OSError(f"could not atomically land {directory} "
+                      "(concurrent writers thrashing)")
     if durable:
         _fsync_dir(os.path.dirname(os.path.abspath(directory)))
 
@@ -149,10 +162,18 @@ def load_metadata(directory: str) -> dict:
         return {}
 
 
-def restore(directory: str, like=None, shardings=None):
+def restore(directory: str, like=None, shardings=None,
+            fill_missing: bool = False):
     """Load a checkpoint. With ``like`` (a pytree), returns that structure;
     otherwise returns a flat {name: array} dict. ``shardings`` (pytree or
-    flat dict) re-places leaves onto devices."""
+    flat dict) re-places leaves onto devices.
+
+    ``fill_missing=True`` substitutes ``like``'s own leaf for any name the
+    checkpoint lacks instead of raising — used by elastic restores where
+    the state schema has grown since the version was published (e.g. a
+    checkpoint written before the error-feedback residual existed restores
+    with the caller's zero-initialized residual).
+    """
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
     flat = {e["name"]: np.load(os.path.join(directory, e["file"]))
@@ -166,6 +187,9 @@ def restore(directory: str, like=None, shardings=None):
         shard_named = dict(_flatten(shardings)[0])
     for name, ref in named:
         if name not in flat:
+            if fill_missing:
+                leaves.append(np.asarray(jax.device_get(ref)))
+                continue
             raise KeyError(f"checkpoint missing leaf {name!r}")
         arr = flat[name]
         if tuple(arr.shape) != tuple(ref.shape):
@@ -207,8 +231,8 @@ class CheckpointManager:
         invisible to readers."""
         steps = []
         for name in os.listdir(self.directory):
-            if (name.startswith("step_") and not name.endswith(".tmp")
-                    and not name.endswith(".old")):
+            if (name.startswith("step_") and ".tmp" not in name
+                    and ".old" not in name):
                 try:
                     step = int(name[5:])
                 except ValueError:
@@ -293,6 +317,11 @@ class ModelStore(CheckpointManager):
     def publish_version(self, version: int, tree,
                         metadata: Optional[dict] = None) -> None:
         self.publish(int(version), tree, metadata=metadata, blocking=True)
+
+    def version_dir(self, version: int) -> str:
+        """Path of a published version — the directory elastic restores
+        hand to ``ckpt.elastic.restore_elastic``."""
+        return self._step_dir(int(version))
 
     def load_version(self, version: int, like=None, shardings=None):
         path = self._step_dir(int(version))

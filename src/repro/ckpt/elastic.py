@@ -6,6 +6,13 @@ Because checkpoints are full logical arrays and sharding specs are derived
 from parameter *paths* (not from the mesh they were saved under), restoring
 onto a new mesh is just re-running the rules against the new mesh and
 device_put-ting each leaf.
+
+The whole learner state reshards as one tree — params, optimizer moments,
+*and* the ``grad_compression`` int8 error-feedback residual. The residual
+is genuine training state: dropping it across a shrink/grow restore would
+silently reintroduce the quantization bias that error feedback exists to
+cancel. Checkpoints published before the residual existed still restore
+via ``fill_missing`` (the caller's zero residual stands in).
 """
 
 from __future__ import annotations
@@ -26,9 +33,15 @@ def reshard(tree, new_mesh: Mesh):
         lambda x, s: jax.device_put(jax.device_get(x), s), tree, shardings)
 
 
-def restore_elastic(directory: str, like, new_mesh: Optional[Mesh] = None):
-    """Restore a checkpoint; if ``new_mesh`` is given, shard onto it."""
-    tree = checkpoint.restore(directory, like=like)
+def restore_elastic(directory: str, like, new_mesh: Optional[Mesh] = None,
+                    fill_missing: bool = False):
+    """Restore a checkpoint; if ``new_mesh`` is given, shard onto it.
+
+    ``fill_missing=True`` tolerates schema growth: leaves absent from the
+    checkpoint (e.g. an error-feedback residual added after the version
+    was published) come from ``like`` instead of raising.
+    """
+    tree = checkpoint.restore(directory, like=like, fill_missing=fill_missing)
     if new_mesh is None:
         return tree
     return reshard(tree, new_mesh)

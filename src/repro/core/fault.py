@@ -60,7 +60,8 @@ class NodeFailure:
 def hedged_map(fns: Sequence[Callable[[], cf.Future]],
                hedge_after_s: Optional[float] = None,
                quorum: Optional[int] = None,
-               timeout_s: Optional[float] = None) -> list[Any]:
+               timeout_s: Optional[float] = None,
+               return_exceptions: bool = False) -> list[Any]:
     """Fan out async calls with straggler mitigation.
 
     Each entry of ``fns`` is a zero-arg callable launching one future (e.g.
@@ -72,6 +73,10 @@ def hedged_map(fns: Sequence[Callable[[], cf.Future]],
       * ``quorum``: return once this many results are in, cancelling the
         rest (partial fan-in — e.g. an ES evolver that only needs the
         fastest 80% of evaluators per generation).
+      * ``return_exceptions``: per-call failures become entries in the
+        result list instead of raising — graceful degradation for quorum
+        aggregation over a fleet where some members may be mid-restart
+        (the caller inspects ``isinstance(r, BaseException)``).
 
     Returns a list aligned with ``fns``; entries that were cancelled by the
     quorum are ``None``.
@@ -97,7 +102,9 @@ def hedged_map(fns: Sequence[Callable[[], cf.Future]],
             except cf.CancelledError:
                 return
             except BaseException as exc:  # noqa: BLE001
-                if first_error[0] is None:
+                if return_exceptions:
+                    results[i] = exc
+                elif first_error[0] is None:
                     first_error[0] = exc
             done_flags[i] = True
             done_count += 1
@@ -119,9 +126,9 @@ def hedged_map(fns: Sequence[Callable[[], cf.Future]],
                     hedge = fns[i]()
                 except BaseException as exc:  # noqa: BLE001
                     with lock:
-                        if first_error[0] is None:
+                        if not return_exceptions and first_error[0] is None:
                             first_error[0] = exc
-                    continue
+                    continue  # primary is still pending; let it decide
                 hedges[i] = hedge
                 hedge.add_done_callback(lambda f, i=i: _record(i, f))
 
@@ -226,7 +233,7 @@ class FaultInjector:
             err = repr(exc)
         self.fired.append({"kind": e.kind, "target": e.target,
                            "t_s": time.monotonic() - self._t0, "error": err})
-        state = "failed" if err else "fired"
+        state = f"failed ({err})" if err else "fired"
         print(f"fault: {e.kind} -> target {e.target} {state}; "
               "traffic continues", flush=True)
 

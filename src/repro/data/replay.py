@@ -17,6 +17,40 @@ from typing import Any, Optional
 import numpy as np
 
 
+class WriterStalled(RuntimeError):
+    """An insert blocked past its deadline because no sampler is draining
+    the table (SPI budget exhausted — typically the learner died).
+
+    Typed so actors can tell "my writer is stalled, re-resolve the replay
+    service and fail over" from a real error. Raised by ``insert(...,
+    raise_on_stall=True)``; the plain bool-returning path is unchanged.
+    """
+
+    def __init__(self, table: str, waited_s: float, stats: dict):
+        super().__init__(
+            f"insert into {table!r} stalled for {waited_s:.2f}s "
+            f"(no sampler draining; table stats: {stats})")
+        self.table = table
+        self.waited_s = waited_s
+        self.stats = stats
+
+
+def is_writer_stalled(exc: BaseException) -> bool:
+    """True if ``exc`` is (or wraps) a ``WriterStalled`` — cross-transport:
+    inproc couriers chain the original via ``__cause__``, gRPC/shm wrap it
+    in a RemoteError whose message carries the remote traceback text."""
+    seen: set[int] = set()
+    cur: Optional[BaseException] = exc
+    while cur is not None and id(cur) not in seen:
+        if isinstance(cur, WriterStalled):
+            return True
+        if type(cur).__name__ == "RemoteError" and "WriterStalled" in str(cur):
+            return True
+        seen.add(id(cur))
+        cur = cur.__cause__
+    return False
+
+
 @dataclasses.dataclass(frozen=True)
 class TableConfig:
     name: str
@@ -62,10 +96,16 @@ class _Table:
 
     # -- ops -------------------------------------------------------------------
     def insert(self, item: Any, priority: float = 1.0,
-               timeout: Optional[float] = None) -> bool:
+               timeout: Optional[float] = None,
+               raise_on_stall: bool = False) -> bool:
         with self._lock:
             if not self._can_insert.wait_for(
                     lambda: self._insert_allowed() or self._closed, timeout):
+                if raise_on_stall:
+                    raise WriterStalled(
+                        self.cfg.name, float(timeout or 0.0),
+                        {"size": len(self._items), "inserts": self._inserts,
+                         "samples": self._samples})
                 return False
             if self._closed:
                 return False
@@ -128,8 +168,10 @@ class ReplayServer:
         return self._tables[table]
 
     def insert(self, table: str, item, priority: float = 1.0,
-               timeout: Optional[float] = 10.0) -> bool:
-        return self._t(table).insert(item, priority, timeout)
+               timeout: Optional[float] = 10.0,
+               raise_on_stall: bool = False) -> bool:
+        return self._t(table).insert(item, priority, timeout,
+                                     raise_on_stall=raise_on_stall)
 
     def sample(self, table: str, n: int,
                timeout: Optional[float] = 10.0):

@@ -1,37 +1,44 @@
-"""End-to-end LM training as a Launchpad program.
+"""End-to-end LM training as a Launchpad program — on the elastic fabric.
 
-Topology (the paper's patterns composed):
+Topology (the paper's patterns composed, surviving worker churn):
 
+    registry (CourierNode: membership + heartbeats, the control plane)
     data (CourierNode × N, prefetching pipeline shards)
-      -> learner (MeshWorkerNode: pjit train loop, self-checkpointing)
-      -> evaluator (PyNode: pulls params, reports eval loss)
+      -> learners (fabric workers: chief aggregates peer gradients via
+         hedged_map quorum, publishes {params, opt, ef} to the versioned
+         ModelStore in ckpt_dir every --publish-every steps)
+      <- supervisor (PyNode: spawns the learner fleet, respawns dead
+         workers under RestartPolicy backoff; a respawned chief restores
+         the last *published* version — step loss <= publish interval)
+    evaluator (PyNode: pulls published versions from the store, reports
+         eval loss — never an ad-hoc RPC params snapshot)
 
 The learner is a *stateful node in the paper-§6 sense*: on restart it
-restores from its latest checkpoint and continues; data nodes and the
-evaluator are stateless and just restart.
+restores from the latest published version and continues; data nodes and
+the evaluator are stateless and just restart.
 
     PYTHONPATH=src python -m repro.launch.train --steps 200
+    PYTHONPATH=src python -m repro.launch.train --learners 2 --steps 300
+    PYTHONPATH=src python -m repro.launch.train --learners 2 --kill-after 3
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced
-    PYTHONPATH=src python -m repro.launch.train --preset lm100m --steps 300
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
+from typing import Optional
 
 import numpy as np
 
 from repro import configs, core as lp
-from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.checkpoint import ModelStore
 from repro.data.pipeline import DataConfig, Prefetcher, make_source
 from repro.models.config import ATTN, ModelConfig
-from repro.sharding import ShardingCtx, use_sharding
-from repro.sharding.rules import batch_spec, param_sharding
+from repro.train.fabric import (ChaosNode, FabricConfig, LearnerWorker,
+                                ThreadWorkerSpawner, TrainSupervisor)
 from repro.train.optimizer import OptimizerConfig
-from repro.train.train_step import (TrainConfig, make_train_state,
-                                    make_train_step)
+from repro.train.train_step import TrainConfig, make_grad_fn
 
 # A self-contained ~100M-param preset (brief: "train ~100M model").
 LM100M = ModelConfig(
@@ -58,92 +65,93 @@ class DataNode:
         return next(self._pf)
 
 
-class Learner:
-    """SPMD learner: pjit train step over the node's mesh; checkpoints and
-    serves params. Restores itself after restarts (paper §6)."""
+class LMTask:
+    """The fabric task for LM pretraining: transformer loss + AdamW."""
 
-    def __init__(self, model_cfg, train_cfg, data_nodes, ckpt_dir,
-                 total_steps, ckpt_every=50, log_every=10, mesh=None):
-        import jax
-        import jax.numpy as jnp
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig):
+        self._model_cfg = model_cfg
+        self.optimizer = train_cfg.optimizer
+        self._compute = make_grad_fn(model_cfg, train_cfg)
 
-        self._cfg = model_cfg
-        self._data = data_nodes
-        self._total = total_steps
-        self._ckpt_every = ckpt_every
-        self._log_every = log_every
-        self._mesh = mesh
-        self._mgr = CheckpointManager(ckpt_dir, keep=2)
-        self._jnp = jnp
+    def init_params(self, key):
+        from repro.models import transformer
+        return transformer.init_params(self._model_cfg, key)
 
-        params, opt = make_train_state(model_cfg, jax.random.key(0))
-        self._start_step = 0
-        step0, restored = self._mgr.restore_latest(
-            {"params": params, "opt": opt})
-        if restored is not None:
-            params, opt = restored["params"], restored["opt"]
-            self._start_step = step0
-            print(f"learner: restored checkpoint at step {step0}")
-        if mesh is not None:
-            p_sh = param_sharding(params, mesh)
-            o_sh = param_sharding(opt, mesh)
-            params = jax.tree.map(jax.device_put, params, p_sh)
-            opt = jax.tree.map(jax.device_put, opt, o_sh)
-        self._params, self._opt = params, opt
-        self._step_fn = jax.jit(make_train_step(model_cfg, train_cfg),
-                                donate_argnums=(0, 1))
-        self._latest_loss = float("nan")
+    def grad_fn(self, params, batch):
+        loss, _aux, grads = self._compute(params, batch)
+        return loss, grads
 
-    # -- courier-exposed -----------------------------------------------------
-    def get_params(self):
-        import jax
-        return jax.tree.map(np.asarray, self._params)
 
-    def status(self):
-        return {"loss": self._latest_loss}
+def _data_batch_fn(data_nodes):
+    """Learner batch source over its assigned data-node shard(s); errors
+    return None so the learner retries while a data node restarts."""
+    def fn():
+        try:
+            shards = [d.next_batch() for d in data_nodes]
+            return {k: np.concatenate([s[k] for s in shards])
+                    for k in shards[0]}
+        except Exception:  # noqa: BLE001
+            return None
+    return fn
 
-    # -- main loop -------------------------------------------------------------
+
+class FleetSupervisor:
+    """PyNode wrapper: hosts the learner fleet on a ThreadWorkerSpawner
+    and runs the TrainSupervisor loop until the chief reports done."""
+
+    def __init__(self, registry, data_nodes, model_cfg: ModelConfig,
+                 train_cfg: TrainConfig, fab_cfg: FabricConfig,
+                 store_dir: str, learners: int = 1, mesh_shape=None,
+                 spawn_grace_s: float = 30.0):
+        self._registry = registry
+        self._data = list(data_nodes)
+        self._task = LMTask(model_cfg, train_cfg)
+        self._fab_cfg = fab_cfg
+        self._store_dir = store_dir
+        self._learners = learners
+        self._mesh_shape = mesh_shape
+        self._spawn_grace_s = spawn_grace_s
+
+    def _make_mesh(self):
+        if self._mesh_shape is None:
+            return None
+        from repro.sharding.compat import make_mesh
+        names = ("data", "model")[: len(self._mesh_shape)]
+        return make_mesh(tuple(self._mesh_shape), names)
+
     def run(self):
-        import jax.numpy as jnp
-        ctx = lp.get_current_context()
-        dp = (ShardingCtx(self._mesh) if self._mesh is not None else None)
-        t0 = time.time()
-        losses = []
-        step = self._start_step
-        with use_sharding(dp):
-            while step < self._total and not ctx.should_stop:
-                shards = [d.next_batch() for d in self._data]
-                batch = {k: np.concatenate([s[k] for s in shards])
-                         for k in shards[0]}
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                self._params, self._opt, metrics = self._step_fn(
-                    self._params, self._opt, batch)
-                step += 1
-                self._latest_loss = float(metrics["loss"])
-                losses.append(self._latest_loss)
-                if step % self._log_every == 0:
-                    rate = self._log_every / max(time.time() - t0, 1e-9)
-                    t0 = time.time()
-                    print(f"step {step:5d} loss={self._latest_loss:7.4f} "
-                          f"lr={float(metrics['lr']):.2e} "
-                          f"gnorm={float(metrics['grad_norm']):6.3f} "
-                          f"{rate:5.2f} steps/s", flush=True)
-                if step % self._ckpt_every == 0:
-                    self._mgr.save(step, {"params": self._params,
-                                          "opt": self._opt})
-        self._mgr.save(step, {"params": self._params, "opt": self._opt},
-                       blocking=True)
-        first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
-        last = np.mean(losses[-10:])
-        print(f"learner done at step {step}: loss {first:.4f} -> {last:.4f}")
-        lp.stop_program()
+        spawner = ThreadWorkerSpawner()
+        n_learners = self._learners
+
+        def spawn_fn(name: str):
+            idx = int(name.rsplit("-", 1)[1])
+            shard = self._data[idx::n_learners] or [
+                self._data[idx % len(self._data)]]
+            batch_fn = _data_batch_fn(shard)
+            mesh = self._make_mesh()
+            spawner.spawn(name, lambda n, ep: LearnerWorker(
+                self._task, batch_fn, self._store_dir, self._registry,
+                self._fab_cfg, name=n, chief=(idx == 0), mesh=mesh,
+                endpoint=ep))
+
+        sup = TrainSupervisor(
+            self._registry, spawn_fn, expected={"learner": n_learners},
+            policy=lp.RestartPolicy(max_restarts=5, backoff_s=0.05),
+            spawn_grace_s=self._spawn_grace_s,
+            total_steps=self._fab_cfg.total_steps)
+        try:
+            sup.run()
+        finally:
+            spawner.stop_all()
 
 
 class Evaluator:
-    """Pulls params periodically and scores a held-out stream."""
+    """Scores published versions from the ModelStore on a held-out
+    stream — always a consistent, durable snapshot."""
 
-    def __init__(self, learner, model_cfg, data_cfg, every_s=5.0):
-        self._learner = learner
+    def __init__(self, store_dir: str, model_cfg: ModelConfig,
+                 data_cfg: DataConfig, every_s: float = 5.0):
+        self._store_dir = store_dir
         self._cfg = model_cfg
         self._src = iter(make_source(dataclasses.replace(data_cfg, seed=999)))
         self._every = every_s
@@ -153,40 +161,69 @@ class Evaluator:
         import jax.numpy as jnp
         from repro.models import transformer
         ctx = lp.get_current_context()
+        store = ModelStore(self._store_dir)
+        like = transformer.init_params(self._cfg, jax.random.key(0))
+        seen: Optional[int] = None
         while not ctx.should_stop:
             ctx.wait_for_stop(self._every)
             if ctx.should_stop:
                 return
-            params = jax.tree.map(jnp.asarray, self._learner.get_params())
+            try:
+                v = store.latest_version()
+                if v is None or v == seen:
+                    continue
+                params = store.load_version(v, like={"params": like})["params"]
+                seen = v
+            except Exception:  # noqa: BLE001 - version GC'd mid-read
+                continue
             batch = next(self._src)
             loss, _ = transformer.loss_fn(
-                self._cfg, params,
-                {k: jnp.asarray(v) for k, v in batch.items()})
-            print(f"  eval loss: {float(loss):.4f}", flush=True)
+                self._cfg, jax.tree.map(jnp.asarray, params),
+                {k: jnp.asarray(v_) for k, v_ in batch.items()})
+            print(f"  eval v{v} loss: {float(loss):.4f}", flush=True)
 
 
 def build_program(model_cfg: ModelConfig, *, steps: int, ckpt_dir: str,
                   batch_size: int = 16, seq_len: int = 64,
                   num_data_nodes: int = 2, num_micro: int = 1,
-                  mesh_shape=None, with_eval: bool = True) -> lp.Program:
+                  mesh_shape=None, with_eval: bool = True,
+                  learners: int = 1, publish_every: int = 50,
+                  kill_after: Optional[float] = None,
+                  # Generous TTL: a first-step jit trace can starve the
+                  # heartbeat thread for seconds; that is a stall, not a
+                  # death, and should not trigger a respawn.
+                  registry_ttl_s: float = 10.0,
+                  heartbeat_s: float = 0.2) -> lp.Program:
     data_cfg = DataConfig(seq_len=seq_len,
                           batch_size=batch_size // num_data_nodes,
                           vocab_size=model_cfg.vocab_size)
     train_cfg = TrainConfig(
         optimizer=OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=steps),
         num_microbatches=num_micro)
+    fab_cfg = FabricConfig(total_steps=steps, batch_size=batch_size,
+                           publish_every=publish_every,
+                           heartbeat_s=heartbeat_s)
 
     p = lp.Program(f"train-{model_cfg.name}")
+    with p.group("registry"):
+        registry = p.add_node(lp.CourierNode(lp.Registry,
+                                             ttl_s=registry_ttl_s))
     with p.group("data"):
         data = [p.add_node(lp.CourierNode(DataNode, data_cfg, i,
                                           num_data_nodes))
                 for i in range(num_data_nodes)]
-    with p.group("learner"):
-        learner = p.add_node(lp.MeshWorkerNode(
-            Learner, model_cfg, train_cfg, data, ckpt_dir, steps))
+    with p.group("supervisor"):
+        p.add_node(lp.PyNode(FleetSupervisor, registry, data, model_cfg,
+                             train_cfg, fab_cfg, ckpt_dir,
+                             learners=learners, mesh_shape=mesh_shape))
+    if kill_after is not None:
+        with p.group("chaos"):
+            p.add_node(lp.PyNode(
+                ChaosNode, registry,
+                [("kill", "learner-0", kill_after, 0.0)]))
     if with_eval:
         with p.group("eval"):
-            p.add_node(lp.PyNode(Evaluator, learner, model_cfg, data_cfg))
+            p.add_node(lp.PyNode(Evaluator, ckpt_dir, model_cfg, data_cfg))
     return p
 
 
@@ -200,6 +237,15 @@ def main(argv=None):
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--learners", type=int, default=1,
+                    help="data-parallel learner count (chief = learner-0)")
+    ap.add_argument("--publish-every", type=int, default=50,
+                    help="ModelStore publish interval = max step loss on "
+                         "a learner death")
+    ap.add_argument("--kill-after", type=float, default=None,
+                    help="chaos demo: kill the chief learner this many "
+                         "seconds in; the supervisor restores it from the "
+                         "last published version")
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2,1 -> data=2,model=1 (needs devices)")
     args = ap.parse_args(argv)
@@ -210,19 +256,20 @@ def main(argv=None):
     else:
         model_cfg = PRESETS[args.preset]
 
+    mesh_shape = (tuple(int(x) for x in args.mesh.split(","))
+                  if args.mesh else None)
     program = build_program(model_cfg, steps=args.steps,
                             ckpt_dir=args.ckpt_dir,
                             batch_size=args.batch_size,
-                            seq_len=args.seq_len)
-    resources = {}
-    if args.mesh:
-        shape = tuple(int(x) for x in args.mesh.split(","))
-        resources["learner"] = {"mesh": shape,
-                                "axes": ("data", "model")[: len(shape)]}
+                            seq_len=args.seq_len,
+                            learners=args.learners,
+                            publish_every=args.publish_every,
+                            kill_after=args.kill_after,
+                            mesh_shape=mesh_shape)
     print(program)
     launcher = lp.ThreadLauncher(
         restart_policy=lp.RestartPolicy(max_restarts=2))
-    launcher.launch(program, resources or None)
+    launcher.launch(program)
     launcher.wait()
     if launcher.fatal_failures:
         raise SystemExit(f"fatal failure: {launcher.fatal_failures[0]}")

@@ -56,7 +56,11 @@ def make_loss_fn(model_cfg: ModelConfig, remat: str, resid_tp: bool = False):
     return loss_fn
 
 
-def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+def make_grad_fn(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    """jit-able ``(params, batch) -> (loss, aux, grads)`` with microbatch
+    accumulation — the gradient half of ``make_train_step``, exposed so
+    the training fabric can aggregate gradients across learners before
+    applying the update."""
     loss_fn = make_loss_fn(model_cfg, train_cfg.remat, train_cfg.resid_tp)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     nm = train_cfg.num_microbatches
@@ -86,6 +90,12 @@ def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
         grads = jax.tree.map(lambda g: (g / nm).astype(jnp.float32), grads)
         loss = loss_sum / nm
         return loss, {"ce": loss, "aux": jnp.zeros(())}, grads
+
+    return compute_grads
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    compute_grads = make_grad_fn(model_cfg, train_cfg)
 
     def train_step(params, opt_state, batch):
         loss, aux, grads = compute_grads(params, batch)
