@@ -13,7 +13,7 @@ Public API mirrors the paper:
     lp.ThreadLauncher().launch(p, resources={...})
 """
 
-from repro.core import courier
+from repro.core import courier, telemetry
 from repro.core.addressing import Address, AddressTable
 from repro.core.discovery import Heartbeater, Registry, ReplicaInfo
 from repro.core.fault import (ALWAYS_RESTART, NO_RESTART, FaultEvent,
@@ -29,6 +29,7 @@ from repro.core.nodes import (Cacher, CacherNode, ColocationNode, CourierHandle,
                               get_current_context, stop_program)
 from repro.core.program import Program
 from repro.core.resources import DEFAULT_GROUP, ResourceGroup
+from repro.core.telemetry import TelemetryHub, get_logger
 
 __all__ = [
     "Program", "ResourceGroup", "DEFAULT_GROUP",
@@ -42,5 +43,6 @@ __all__ = [
     "RestartPolicy", "NodeFailure", "NO_RESTART", "ALWAYS_RESTART", "hedged_map",
     "FaultEvent", "FaultInjector",
     "Registry", "Heartbeater", "ReplicaInfo",
+    "TelemetryHub", "get_logger", "telemetry",
     "courier",
 ]

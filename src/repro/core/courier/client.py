@@ -29,8 +29,17 @@ from __future__ import annotations
 from concurrent import futures as cf
 from typing import Any, Optional, Sequence
 
+from repro.core import telemetry
 from repro.core.courier import serialization as ser
 from repro.core.courier.transport import Call, Transport, make_transport
+
+
+def _inject_calls(calls: Sequence[Call]) -> Sequence[Call]:
+    """Fold the current sampled trace context into each batched call's
+    kwargs (copy-on-write: caller-owned tuples are never mutated)."""
+    if telemetry.current_context() is None:
+        return calls
+    return [(m, a, telemetry.inject(kw)) for m, a, kw in calls]
 
 
 def _statuses_to_results(statuses: Sequence[tuple]) -> list:
@@ -49,7 +58,7 @@ class _FuturesProxy:
     def batch_call(self, calls: Sequence[Call]) -> cf.Future:
         """Async batch; resolves to per-call results in request order, with
         exception instances occupying the slots of failed calls."""
-        inner = self._transport.batch_call_future(calls)
+        inner = self._transport.batch_call_future(_inject_calls(calls))
         out: cf.Future = cf.Future()
         out.set_running_or_notify_cancel()
 
@@ -68,7 +77,8 @@ class _FuturesProxy:
         transport = self._transport
 
         def call(*args, **kwargs) -> cf.Future:
-            return transport.call_future(method, args, kwargs)
+            return transport.call_future(method, args,
+                                         telemetry.inject(kwargs))
 
         return call
 
@@ -110,7 +120,7 @@ class CourierClient:
         transport = self._transport
 
         def call(*args, **kwargs):
-            return transport.call(method, args, kwargs)
+            return transport.call(method, args, telemetry.inject(kwargs))
 
         return call
 
@@ -125,7 +135,7 @@ class CourierClient:
         ``return_exceptions`` is set, in which case error slots hold the
         exception instance instead.
         """
-        statuses = self._transport.batch_call(calls)
+        statuses = self._transport.batch_call(_inject_calls(calls))
         if return_exceptions:
             return _statuses_to_results(statuses)
         return [ser.status_to_result(status) for status in statuses]

@@ -22,6 +22,7 @@ from typing import Any, Callable, Optional
 
 import grpc
 
+from repro.core import telemetry
 from repro.core.courier import serialization as ser
 from repro.core.courier import shm as shm_mod
 from repro.core.courier.transport import (COURIER_BATCH_METHOD,
@@ -148,7 +149,16 @@ class CourierServer:
         if method.startswith("_") or method == "run":
             raise AttributeError(
                 f"method {method!r} is not exposed over courier")
-        return getattr(self._obj, method)(*args, **kwargs)
+        # Trace envelope: the client-side proxy injected the sampled
+        # context into kwargs; activate it on this handler thread so
+        # spans recorded by the service nest under the caller's span.
+        # This chokepoint covers gRPC unary, gRPC batch entries, and
+        # the shm listener (which dispatches through invoke=).
+        ctx = telemetry.extract(kwargs)
+        if ctx is None:
+            return getattr(self._obj, method)(*args, **kwargs)
+        with telemetry.activate(ctx):
+            return getattr(self._obj, method)(*args, **kwargs)
 
     def _handle(self, request: bytes, context) -> bytes:
         legacy = not ser.is_framed(request)
@@ -156,8 +166,17 @@ class CourierServer:
             self._handler_init()
         try:
             method, args, kwargs = ser.decode_call(request)
-            return ser.encode_reply_ok(self._invoke(method, args, kwargs),
-                                       legacy=legacy)
+            # Peek (don't pop — _invoke owns extraction) so the reply
+            # serialization span lands in the same trace.
+            wire = kwargs.get(telemetry.TRACE_KEY) \
+                if isinstance(kwargs, dict) else None
+            result = self._invoke(method, args, kwargs)
+            ctx = telemetry.TraceContext.from_wire(wire) if wire else None
+            if ctx is None:
+                return ser.encode_reply_ok(result, legacy=legacy)
+            with telemetry.activate(ctx):
+                with telemetry.span("reply", method=method):
+                    return ser.encode_reply_ok(result, legacy=legacy)
         except BaseException as exc:  # noqa: BLE001 - ship any failure back
             return ser.encode_reply_error(exc, legacy=legacy)
 

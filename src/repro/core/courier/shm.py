@@ -612,9 +612,15 @@ class Chan:
         self._retired: list[SlotPool] = []
         self._pools_attached: dict[str, SlotPool] = {}
         self._lock = threading.Lock()
+        # Telemetry counters (plain ints: GIL-atomic +=, read by stats()).
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.serialize_us = 0
+        self.pool_grows = 0
 
     # -- writer side ---------------------------------------------------------
     def _new_pool(self, slot_size: int) -> SlotPool:
+        self.pool_grows += 1
         if self._pool is not None:
             # The replaced pool may still hold in-flight messages (refs
             # in the ring, leases on the consumer); park it and unlink
@@ -642,8 +648,11 @@ class Chan:
 
     def send(self, kind: int, req_id: int, obj: Any,
              timeout: Optional[float] = None, give_up=None) -> None:
+        t0 = time.perf_counter()
         frames = ser.encode_frames(obj)
         total = ser.framed_size(frames)
+        self.serialize_us += int((time.perf_counter() - t0) * 1e6)
+        self.bytes_out += total
         with self._lock:
             if total <= SPILL_THRESHOLD:
                 self._ctrl.write(kind, req_id, ser.framed_chunks(frames),
@@ -703,6 +712,7 @@ class Chan:
             (name_len,) = _REF_NAME.unpack_from(mv, 2)
             name = str(mv[4:4 + name_len], "ascii")
             index, total = _REF_TAIL.unpack_from(mv, 4 + name_len)
+            self.bytes_in += total
             pool = self._pools_attached.get(name)
             if pool is None:
                 pool = SlotPool.attach(name)
@@ -725,6 +735,7 @@ class Chan:
                 return ser.loads(pool.consume_copy(index, total))
             return ser.loads_owned(pool.view(index, total),
                                    pool.lease(index))
+        self.bytes_in += mv.nbytes
         return ser.loads(body)
 
     # -- lifecycle -----------------------------------------------------------
@@ -1063,6 +1074,17 @@ class ClientConnection:
         self._conn_id = conn_id
         self._server_pid = server_pid
         self._closed = False
+
+    def io_stats(self) -> dict:
+        """Wire-level counters for :meth:`ShmTransport.stats` — request
+        bytes/serialize time from the outbound channel, reply bytes from
+        the inbound one, pool regrows from both."""
+        return {
+            "bytes_out": self._out.bytes_out,
+            "bytes_in": self._in.bytes_in,
+            "serialize_us": self._out.serialize_us,
+            "pool_grows": self._out.pool_grows + self._in.pool_grows,
+        }
 
     @classmethod
     def connect(cls, name: str, wait: Optional[float] = None,

@@ -41,12 +41,42 @@ from typing import Any, Callable, Optional, Sequence
 
 import grpc
 
+from repro.core import telemetry
 from repro.core.courier import inprocess
 from repro.core.courier import serialization as ser
 from repro.core.courier import shm as shm_mod
 
 # One call: (method, args, kwargs). One status: ("ok", value) | ("err", ...).
 Call = tuple[str, tuple, dict]
+
+
+class TransportStats:
+    """Per-transport I/O counters. Plain attribute adds (GIL-atomic
+    enough for telemetry) — the record path takes no locks. ``bytes_*``
+    count serialized payloads where a wire exists (gRPC/shm); the inproc
+    transport moves objects, so its byte counters stay zero."""
+
+    __slots__ = ("calls", "batch_calls", "batched_calls_in_frames",
+                 "errors", "bytes_out", "bytes_in", "serialize_us",
+                 "pool_grows")
+
+    def __init__(self):
+        self.calls = 0
+        self.batch_calls = 0
+        self.batched_calls_in_frames = 0
+        self.errors = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.serialize_us = 0.0
+        self.pool_grows = 0
+
+    def as_dict(self) -> dict:
+        return {"calls": self.calls, "batch_calls": self.batch_calls,
+                "batched_calls_in_frames": self.batched_calls_in_frames,
+                "errors": self.errors, "bytes_out": self.bytes_out,
+                "bytes_in": self.bytes_in,
+                "serialize_us": self.serialize_us,
+                "pool_grows": self.pool_grows}
 
 _GRPC_OPTIONS = [
     ("grpc.max_send_message_length", -1),
@@ -73,6 +103,15 @@ class Transport(abc.ABC):
     """Moves calls to one service endpoint."""
 
     endpoint: str
+
+    def __init__(self):
+        self._io = TransportStats()
+
+    def stats(self) -> dict:
+        """Cumulative I/O counters (calls, batched calls, bytes in/out,
+        errors, serialize time, slot-pool grow events) — the transport's
+        contribution to a node's ``telemetry()`` report."""
+        return self._io.as_dict()
 
     @abc.abstractmethod
     def call(self, method: str, args: tuple, kwargs: dict) -> Any:
@@ -159,7 +198,8 @@ class _DecodingFuture(cf.Future):
 
     @classmethod
     def wrap(cls, grpc_future, decode: Callable[[bytes], Any],
-             endpoint: str) -> "cf.Future":
+             endpoint: str, io: Optional["TransportStats"] = None
+             ) -> "cf.Future":
         out = cls()
         out.set_running_or_notify_cancel()
 
@@ -167,6 +207,8 @@ class _DecodingFuture(cf.Future):
             try:
                 out.set_result(decode(gf.result()))
             except grpc.RpcError as exc:
+                if io is not None:
+                    io.errors += 1
                 out.set_exception(_wrap_rpc_error(endpoint, exc))
             except BaseException as exc:  # noqa: BLE001
                 out.set_exception(exc)
@@ -186,6 +228,7 @@ class GrpcTransport(Transport):
 
     def __init__(self, endpoint: str, timeout: Optional[float] = None,
                  wire_format: str = "frames"):
+        super().__init__()
         if endpoint.startswith("grpc://"):
             endpoint = endpoint[len("grpc://"):]
         if wire_format not in ("frames", "legacy"):
@@ -256,37 +299,65 @@ class GrpcTransport(Transport):
             _channel_pool.release(self._target)
 
     # -- calls ---------------------------------------------------------------
+    def _encode(self, calls_or_one, batch: bool) -> bytes:
+        io = self._io
+        t0 = time.perf_counter()
+        if batch:
+            payload = ser.encode_batch_call(calls_or_one, legacy=self._legacy)
+            io.batch_calls += 1
+            io.batched_calls_in_frames += len(calls_or_one)
+        else:
+            method, args, kwargs = calls_or_one
+            payload = ser.encode_call(method, args, kwargs,
+                                      legacy=self._legacy)
+            io.calls += 1
+        io.serialize_us += (time.perf_counter() - t0) * 1e6
+        io.bytes_out += len(payload)
+        return payload
+
+    def _decode_reply(self, reply: bytes):
+        self._io.bytes_in += len(reply)
+        return ser.decode_reply(reply)
+
+    def _decode_batch_reply(self, reply: bytes):
+        self._io.bytes_in += len(reply)
+        return ser.decode_batch_reply(reply)
+
     def call(self, method: str, args: tuple, kwargs: dict) -> Any:
         unary, _ = self._callables(ensure_ready=True)
-        payload = ser.encode_call(method, args, kwargs, legacy=self._legacy)
+        payload = self._encode((method, args, kwargs), batch=False)
         try:
             # wait_for_ready: don't fail calls issued before the server node
             # finished binding (launch is asynchronous).
             reply = unary(payload, timeout=self._timeout, wait_for_ready=True)
         except grpc.RpcError as exc:
+            self._io.errors += 1
             raise _wrap_rpc_error(self.endpoint, exc) from exc
-        return ser.decode_reply(reply)
+        return self._decode_reply(reply)
 
     def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
         unary, _ = self._callables()
-        payload = ser.encode_call(method, args, kwargs, legacy=self._legacy)
+        payload = self._encode((method, args, kwargs), batch=False)
         gf = unary.future(payload, timeout=self._timeout, wait_for_ready=True)
-        return _DecodingFuture.wrap(gf, ser.decode_reply, self.endpoint)
+        return _DecodingFuture.wrap(gf, self._decode_reply, self.endpoint,
+                                    io=self._io)
 
     def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
         _, batch = self._callables(ensure_ready=True)
-        payload = ser.encode_batch_call(calls, legacy=self._legacy)
+        payload = self._encode(calls, batch=True)
         try:
             reply = batch(payload, timeout=self._timeout, wait_for_ready=True)
         except grpc.RpcError as exc:
+            self._io.errors += 1
             raise _wrap_rpc_error(self.endpoint, exc) from exc
-        return ser.decode_batch_reply(reply)
+        return self._decode_batch_reply(reply)
 
     def batch_call_future(self, calls: Sequence[Call]) -> cf.Future:
         _, batch = self._callables()
-        payload = ser.encode_batch_call(calls, legacy=self._legacy)
+        payload = self._encode(calls, batch=True)
         gf = batch.future(payload, timeout=self._timeout, wait_for_ready=True)
-        return _DecodingFuture.wrap(gf, ser.decode_batch_reply, self.endpoint)
+        return _DecodingFuture.wrap(gf, self._decode_batch_reply,
+                                    self.endpoint, io=self._io)
 
     def __repr__(self) -> str:
         fmt = "legacy" if self._legacy else "frames"
@@ -325,6 +396,7 @@ class ShmTransport(Transport):
     def __init__(self, endpoint: str, timeout: Optional[float] = None,
                  connect_wait: Optional[float] = None,
                  zero_copy: bool = True):
+        super().__init__()
         if endpoint.startswith("shm://"):
             endpoint = endpoint[len("shm://"):]
         self.endpoint = f"shm://{endpoint}"
@@ -419,6 +491,7 @@ class ShmTransport(Transport):
             self._broken = exc
             pending = list(self._pending.values())
             self._pending.clear()
+        self._io.errors += len(pending)
         for fut in pending:
             if not fut.done():
                 fut.set_exception(exc)
@@ -494,17 +567,37 @@ class ShmTransport(Transport):
 
     # -- calls ---------------------------------------------------------------
     def call(self, method: str, args: tuple, kwargs: dict) -> Any:
+        self._io.calls += 1
         return self._await(*self._submit(shm_mod.KIND_CALL,
                                          (method, args, kwargs)))
 
     def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
+        self._io.calls += 1
         return self._submit(shm_mod.KIND_CALL, (method, args, kwargs))[1]
 
     def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
+        self._io.batch_calls += 1
+        self._io.batched_calls_in_frames += len(calls)
         return self._await(*self._submit(shm_mod.KIND_BATCH, list(calls)))
 
     def batch_call_future(self, calls: Sequence[Call]) -> cf.Future:
+        self._io.batch_calls += 1
+        self._io.batched_calls_in_frames += len(calls)
         return self._submit(shm_mod.KIND_BATCH, list(calls))[1]
+
+    def stats(self) -> dict:
+        """Transport counters plus the connection's wire-level I/O —
+        bytes actually carried by the rings (serialize time included)
+        and slot-pool grow events on the send channel."""
+        out = self._io.as_dict()
+        io = getattr(self._conn, "io_stats", None)
+        if callable(io):
+            conn = io()
+            out["bytes_out"] += conn["bytes_out"]
+            out["bytes_in"] += conn["bytes_in"]
+            out["serialize_us"] += conn["serialize_us"]
+            out["pool_grows"] += conn["pool_grows"]
+        return out
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
@@ -533,6 +626,7 @@ class InProcTransport(Transport):
     """
 
     def __init__(self, name: str):
+        super().__init__()
         self.endpoint = f"inproc://{name}"
         self._name = name
         self._obj = None
@@ -549,12 +643,30 @@ class InProcTransport(Transport):
         return getattr(self._target_obj(), method)
 
     def call(self, method: str, args: tuple, kwargs: dict) -> Any:
-        return self._resolve(method)(*args, **kwargs)
+        # Mirror the server chokepoint: pop the trace envelope and run the
+        # handler under it, so a sampled request traces identically
+        # whichever transport launch picked. kwargs is copied first — the
+        # caller may share the dict (e.g. a retried batch entry).
+        self._io.calls += 1
+        ctx = None
+        if telemetry.TRACE_KEY in kwargs:
+            kwargs = dict(kwargs)
+            ctx = telemetry.extract(kwargs)
+        try:
+            if ctx is not None:
+                with telemetry.activate(ctx):
+                    return self._resolve(method)(*args, **kwargs)
+            return self._resolve(method)(*args, **kwargs)
+        except BaseException:
+            self._io.errors += 1
+            raise
 
     def call_future(self, method: str, args: tuple, kwargs: dict) -> cf.Future:
         return inprocess.shared_pool().submit(self.call, method, args, kwargs)
 
     def batch_call(self, calls: Sequence[Call]) -> list[tuple]:
+        self._io.batch_calls += 1
+        self._io.batched_calls_in_frames += len(calls)
         statuses = []
         for method, args, kwargs in calls:
             try:

@@ -42,6 +42,8 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from repro.core import telemetry
+
 
 @dataclasses.dataclass
 class ReplicaInfo:
@@ -157,7 +159,9 @@ class Registry:
                 return False
             self._generation += 1
             self._evictions += 1
-            return True
+        telemetry.record_event("eviction", cause="caller reported a failure",
+                               replica=name)
+        return True
 
     def stats(self) -> dict:
         with self._lock:
@@ -165,6 +169,11 @@ class Registry:
                     "live": len(self._entries),
                     "evictions": self._evictions,
                     "ttl_s": self._ttl}
+
+    def telemetry(self) -> dict:
+        """Standard telemetry scrape (the hub collects eviction events —
+        with their causes — from here)."""
+        return telemetry.telemetry_snapshot(service=self.stats())
 
     # -- internal ------------------------------------------------------------
     def _evict_expired(self, now: float) -> None:
@@ -177,6 +186,9 @@ class Registry:
             del self._entries[name]
             self._generation += 1
             self._evictions += 1
+            telemetry.record_event(
+                "eviction", cause=f"missed heartbeats for > {self._ttl}s",
+                replica=name)
 
 
 class Heartbeater:

@@ -58,6 +58,7 @@ import time
 import numpy as np
 
 from repro import configs, core as lp
+from repro.core import telemetry
 from repro.models.config import ModelConfig
 from repro.serve import decode as serve_lib
 from repro.serve.router import Router, decorrelated_backoff, is_overloaded
@@ -225,6 +226,8 @@ class EngineServer:
         TTL-evicts this replica, then its resumed beats re-register it
         (the stall → evict → revive cycle). The engine keeps serving
         whatever is already in flight."""
+        telemetry.record_event("stall", cause=f"heartbeats paused "
+                               f"{seconds}s (fault injection)")
         if self._heartbeater is not None:
             self._heartbeater.pause(seconds)
         return "stalled"
@@ -234,6 +237,8 @@ class EngineServer:
         ``generate`` raises ``ConnectionError``, routers fail over and
         report the failure; heartbeats continue, so the replica
         re-registers and recovers once the window passes."""
+        telemetry.record_event("drop", cause=f"transport blackholed "
+                               f"{seconds}s (fault injection)")
         self._drop_until = time.monotonic() + float(seconds)
         return "dropped"
 
@@ -241,6 +246,8 @@ class EngineServer:
         """Simulate a replica crash: stop heartbeats (no deregistration)
         and the engine, failing everything in flight. The fabric's job is
         to make this invisible to clients."""
+        telemetry.record_event("kill", cause="replica killed "
+                               "(fault injection)")
         if self._heartbeater is not None:
             self._heartbeater.stop(deregister=False)
         self._engine.stop()
@@ -248,6 +255,12 @@ class EngineServer:
 
     def stats(self):
         return self._engine.stats()
+
+    def telemetry(self):
+        """Telemetry scrape target: process metrics + drained span/event
+        rings, with the engine's full counter set as the service payload
+        (the hub files it per node name)."""
+        return telemetry.telemetry_snapshot(service=self._engine.stats())
 
 
 class Batcher:
@@ -364,7 +377,8 @@ class Client:
     """
 
     def __init__(self, batcher, meter, num_requests: int, prompt_len: int,
-                 vocab: int, seed: int, window: int = 4, source: str = ""):
+                 vocab: int, seed: int, window: int = 4, source: str = "",
+                 trace_every: int = 0):
         self._batcher = batcher
         self._meter = meter
         self._n = num_requests
@@ -375,13 +389,26 @@ class Client:
         # Which admission front this client talks to (router/batcher node
         # label) — the meter namespaces its percentiles by it.
         self._source = source
+        # Trace sampling: every Nth request carries a trace envelope (0 =
+        # off). The sampled request's root "request" span is the measured
+        # e2e window every downstream span must account for.
+        self._trace_every = max(0, int(trace_every))
+
+    def _submit(self, prompt, trace):
+        if trace is None:
+            return self._batcher.futures.submit(prompt)
+        # Current-thread context drives injection at the courier proxy;
+        # the envelope's parent is the pre-minted root span id, so every
+        # remote span nests under the "request" root.
+        with telemetry.activate(trace[0].child(trace[1])):
+            return self._batcher.futures.submit(prompt)
 
     def run(self):
-        pending: list[tuple[float, np.ndarray, object]] = []
+        pending: list[tuple] = []
         records: list[tuple[float, int]] = []
 
         def drain_one():
-            t0, prompt, fut = pending.pop(0)
+            t0, prompt, fut, trace = pending.pop(0)
             backoff = 0.0
             while True:
                 try:
@@ -399,16 +426,26 @@ class Client:
                     backoff = decorrelated_backoff(backoff, self._rng,
                                                    base_s=0.005, cap_s=0.2)
                     time.sleep(backoff)
-                    fut = self._batcher.futures.submit(prompt)
+                    fut = self._submit(prompt, trace)
+            if trace is not None:
+                ctx, root_sid, t0w, t0p = trace
+                telemetry.record_span("request", ctx, t0w,
+                                      time.perf_counter() - t0p,
+                                      span_id=root_sid, root=True,
+                                      out_len=len(out))
             records.append((time.monotonic() - t0, len(out)))
 
-        for _ in range(self._n):
+        for k in range(self._n):
             while len(pending) >= self._window:
                 drain_one()
             prompt = self._rng.integers(0, self._vocab, self._plen,
                                         dtype=np.int32)
+            trace = None
+            if self._trace_every and k % self._trace_every == 0:
+                trace = (telemetry.start_trace(), telemetry.new_span_id(),
+                         time.time(), time.perf_counter())
             pending.append((time.monotonic(), prompt,
-                            self._batcher.futures.submit(prompt)))
+                            self._submit(prompt, trace), trace))
         while pending:
             drain_one()
         self._meter.batch_call(
@@ -420,12 +457,15 @@ class Meter:
     """Collects request latencies; prints percentiles and (optionally)
     writes the summary to a JSON file before stopping the program.
 
-    Records are tagged with a ``source`` label (the router or batcher
-    node the client went through). One meter serves the whole program and
-    writes ONE file: the top-level keys are the merged roll-up row across
-    every source, with the per-source percentile summaries namespaced
-    under ``per_source`` — N routers writing per-replica summaries to the
-    same ``--meter-json`` path previously meant last-writer-wins.
+    Built on the telemetry histogram layer: every record lands in a
+    per-source :class:`repro.core.telemetry.Histogram` registered as
+    ``meter.latency_ms.<source>`` in the process metrics registry — so
+    the same numbers the meter prints are scrapable through any
+    ``telemetry()`` RPC, and the summary's count/mean are exact while
+    p50/p95 are log2-bucket approximations (<= ~4.5% relative error, the
+    histogram's bucket width). The summary JSON keeps its shape: the
+    top-level keys are the merged roll-up row (histograms merge by
+    bucket) with per-source summaries namespaced under ``per_source``.
 
     ``holds`` delays the program stop past the last served request: each
     hold is dropped by a ``release()`` RPC, and the stop fires only once
@@ -439,35 +479,46 @@ class Meter:
                  holds: int = 0):
         self._expected = expected
         self._summary_path = summary_path
-        self._lat: dict[str, list[float]] = {}
+        self._hists: dict[str, telemetry.Histogram] = {}
         self._count = 0
         self._holds = holds
         self._summary_done = False
         self._lock = threading.Lock()
 
     @staticmethod
-    def _percentiles(lat: np.ndarray) -> dict:
-        return {"count": int(lat.size),
-                "p50_ms": float(np.percentile(lat, 50) * 1e3),
-                "p95_ms": float(np.percentile(lat, 95) * 1e3),
-                "mean_ms": float(lat.mean() * 1e3)}
+    def _percentiles(h: telemetry.Histogram) -> dict:
+        return {"count": int(h.count),
+                "p50_ms": float(h.percentile(50)),
+                "p95_ms": float(h.percentile(95)),
+                "mean_ms": float(h.mean)}
 
     def record(self, latency_s: float, out_len: int, source: str = ""):
         with self._lock:
-            self._lat.setdefault(source or "default", []).append(latency_s)
+            src = source or "default"
+            h = self._hists.get(src)
+            if h is None:
+                h = telemetry.metrics().histogram(f"meter.latency_ms.{src}")
+                # This meter's lifetime scopes the window: the registry
+                # entry may survive from a previous program in the same
+                # process (thread launcher, tests) and must not leak its
+                # counts into this run's summary.
+                h.reset()
+                self._hists[src] = h
+            h.record(latency_s * 1e3)       # stored in ms: keys read direct
             self._count += 1
             done = self._count >= self._expected and not self._summary_done
             if done:
                 self._summary_done = True
             stop = self._count >= self._expected and self._holds == 0
         if done:
-            merged = np.concatenate(
-                [np.array(v) for v in self._lat.values()])
+            merged = telemetry.Histogram("meter.latency_ms")
+            for h in self._hists.values():
+                merged.merge(h)
             summary = self._percentiles(merged)   # the merged roll-up row
-            if len(self._lat) > 1 or "default" not in self._lat:
+            if len(self._hists) > 1 or "default" not in self._hists:
                 summary["per_source"] = {
-                    src: self._percentiles(np.array(v))
-                    for src, v in sorted(self._lat.items())}
+                    src: self._percentiles(h)
+                    for src, h in sorted(self._hists.items())}
             print(f"served {summary['count']} requests: "
                   f"p50={summary['p50_ms']:.1f}ms "
                   f"p95={summary['p95_ms']:.1f}ms")
@@ -477,6 +528,10 @@ class Meter:
                     f.write("\n")
         if stop:
             lp.stop_program()
+
+    def telemetry(self):
+        """Scrape target (explicit hub handle in the fabric program)."""
+        return telemetry.telemetry_snapshot()
 
     def release(self, tag: str = "") -> None:
         """Drop one stop-hold (e.g. the RolloutDriver finished its roll)."""
@@ -500,7 +555,9 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
                   model_version: int | None = None,
                   rollout: int | None = None,
                   rollout_after: int | None = None,
-                  canary_fraction: float = 0.25) -> lp.Program:
+                  canary_fraction: float = 0.25,
+                  telemetry_dir: str | None = None,
+                  trace_every: int = 0) -> lp.Program:
     """Wire the serving topology as a Launchpad program.
 
     ``routers == 0`` (default) is the direct PR-4 path — one engine (or
@@ -517,6 +574,12 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
     version ``V`` once ``rollout_after`` requests have been served —
     drain, hot-swap, canary-compare, promote (or roll back), while the
     clients' traffic keeps completing.
+
+    ``telemetry_dir`` adds a TelemetryHub node (fabric topology only)
+    that scrapes every replica through the registry — plus the routers
+    and meter by handle — and writes ``telemetry.json`` +
+    ``trace.json`` (Perfetto) there. ``trace_every=N`` makes every
+    client trace its every Nth request end to end.
     """
     p = lp.Program(f"serve-{model_cfg.name}")
     total = num_clients * requests_per_client
@@ -545,7 +608,7 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
             for i in range(num_clients):
                 p.add_node(lp.CourierNode(
                     Client, batcher, meter, requests_per_client, prompt_len,
-                    model_cfg.vocab_size, seed=i))
+                    model_cfg.vocab_size, seed=i, trace_every=trace_every))
         return p
 
     if mode != "continuous":
@@ -592,7 +655,13 @@ def build_program(model_cfg: ModelConfig, *, num_clients=3,
             p.add_node(lp.CourierNode(
                 Client, router_handles[m], meter, requests_per_client,
                 prompt_len, model_cfg.vocab_size, seed=i,
-                source=router_nodes[m].name))
+                source=router_nodes[m].name, trace_every=trace_every))
+    if telemetry_dir is not None:
+        with p.group("telemetry"):
+            p.add_node(lp.PyNode(
+                lp.TelemetryHub, registry,
+                targets=list(router_handles) + [meter, registry],
+                poll_s=max(heartbeat_s, 0.1), out_dir=telemetry_dir))
     if kill_after is not None:
         with p.group("chaos"):
             p.add_node(lp.PyNode(
@@ -701,6 +770,12 @@ def main(argv=None):
                     help="rollout demo: roll the fleet v0 -> v1 after N "
                          "requests (needs the fabric; publishes both "
                          "versions into --store first)")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="fabric only: run a TelemetryHub and write "
+                         "telemetry.json + trace.json (Perfetto) here")
+    ap.add_argument("--trace-every", type=int, default=0, metavar="N",
+                    help="trace every Nth request per client end to end "
+                         "(0 = tracing off)")
     args = ap.parse_args(argv)
     cfg = (configs.get_reduced(args.arch) if args.arch
            else configs.get_reduced("qwen2-1.5b"))
@@ -727,7 +802,9 @@ def main(argv=None):
                             page_size=args.page_size, num_pages=args.pages,
                             store_dir=store_dir, model_version=model_version,
                             rollout=rollout,
-                            rollout_after=args.rollout_after)
+                            rollout_after=args.rollout_after,
+                            telemetry_dir=args.telemetry_dir,
+                            trace_every=args.trace_every)
     print(program)
     lp.launch_and_wait(program, timeout_s=600)
 

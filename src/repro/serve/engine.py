@@ -95,6 +95,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.models.config import ModelConfig
 
 _CHUNKABLE_KINDS = {"attn", "swa", "local"}
@@ -110,6 +111,11 @@ class _Request:
     max_new: int
     future: cf.Future
     submitted: float
+    # Trace attribution, captured on the submitting (RPC handler) thread:
+    # the engine thread has no contextvar state, so spans for this request
+    # are recorded against this explicit context.
+    ctx: Optional[telemetry.TraceContext] = None
+    wall: float = 0.0             # submit wall-clock (TTFT / span anchors)
 
 
 @dataclasses.dataclass
@@ -321,6 +327,10 @@ class ServeEngine:
         # Weight hot-swap handoff: (params, applied-event), installed by
         # the engine thread at the top of its next step.
         self._pending_swap: Optional[tuple[Any, threading.Event]] = None
+        # Node attribution for spans recorded on the engine thread (which
+        # never gets a WorkerContext); captured here, on the constructing
+        # node's thread.
+        self._node = telemetry.node_name()
         # EWMA decode-step microseconds per token: the routing signal a
         # load balancer uses to weigh this engine against its siblings.
         self._ewma_us_tok = 0.0
@@ -358,7 +368,11 @@ class ServeEngine:
                 fut.set_exception(RuntimeError("engine stopped"))
                 return fut
             self._counters["submitted"] += 1
-            self._queue.put(_Request(prompt, mn, fut, time.monotonic()))
+            ctx = telemetry.current_context()
+            self._queue.put(_Request(
+                prompt, mn, fut, time.monotonic(),
+                ctx=ctx if ctx is not None and ctx.sampled else None,
+                wall=time.time()))
         self._wake.set()
         return fut
 
@@ -457,15 +471,25 @@ class ServeEngine:
         return min(w, self._ns)
 
     # -- engine side ---------------------------------------------------------
-    def _activate(self, req: _Request, i: int, first: int) -> None:
+    def _activate(self, req: _Request, i: int, first: int,
+                  path: str = "direct") -> None:
         """Mark slot ``i`` live: host bookkeeping + the device-resident
         feed-token/position rows (one donated row write, no full-array
         host->device rebuild). Compact-window engines skip the device
         write: their windows rebuild the [W] feed operands from host slot
-        state anyway, so the per-admission jit call would be pure tax."""
+        state anyway, so the per-admission jit call would be pure tax.
+
+        The first generated token exists here, so this is where
+        time-to-first-token lands — classed by prefill path (``direct``
+        vs ``chunked``), the two populations whose TTFT distributions an
+        SLO policy must not average together."""
         import jax.numpy as jnp
         self._slots[i] = _Slot(request=req, t=len(req.prompt),
                                generated=[first])
+        if req.wall:
+            telemetry.metrics().histogram(
+                f"engine.ttft_us.{path}").record(
+                    (time.time() - req.wall) * 1e6)
         if not self._compact:
             self._tokens_dev, self._t_dev = self._row_write(
                 self._tokens_dev, self._t_dev, jnp.int32(i), jnp.int32(first),
@@ -521,6 +545,12 @@ class ServeEngine:
                 self._release_pages(row_pages)
                 continue                                    # cancelled
             i = self._free.pop()
+            if req.ctx is not None:
+                # Admission wait: submit RPC -> a free slot (and, in paged
+                # mode, the page budget) became this request's.
+                telemetry.record_span("admission", req.ctx, req.wall,
+                                      time.time() - req.wall,
+                                      node=self._node, slot=i)
             c = len(shared)
             if self._has_paged:
                 self._row_pages[i] = row_pages
@@ -543,6 +573,7 @@ class ServeEngine:
                     consumed=c * self._ps, start_page=c)
                 continue
             try:
+                t0w, t0 = time.time(), time.perf_counter()
                 key = self._split_key()
                 if c:
                     flat = self._gather(self._state, jnp.int32(i),
@@ -566,6 +597,12 @@ class ServeEngine:
                     self._state = self._write(self._state, slot_state,
                                               jnp.int32(i))
                 first = int(np.asarray(nxt)[0, 0])
+                if req.ctx is not None:
+                    telemetry.record_span(
+                        "prefill", req.ctx, t0w,
+                        time.perf_counter() - t0, node=self._node,
+                        path="direct",
+                        tokens=len(req.prompt) - c * self._ps)
             except Exception as exc:                        # noqa: BLE001
                 # Per-request failure delivery: the slot goes straight back
                 # and the step proceeds for everyone else.
@@ -578,7 +615,7 @@ class ServeEngine:
                     self._counters["failed"] += 1
                 req.future.set_exception(exc)
                 continue
-            self._activate(req, i, first)
+            self._activate(req, i, first, path="direct")
 
     def _advance_chunk(self) -> bool:
         """Run ONE prefill chunk of the pending request (if any) between
@@ -592,11 +629,17 @@ class ServeEngine:
         prompt = p.request.prompt
         c0 = p.consumed
         c1 = min(c0 + self._chunk, len(prompt))
+        t0w, t0 = time.time(), time.perf_counter()
         try:
             toks = jnp.asarray(prompt[None, c0:c1])
             logits, p.state = self._extend(self._params, p.state, toks,
                                            jnp.int32(c0))
             p.consumed = c1
+            if p.request.ctx is not None:
+                telemetry.record_span("prefill", p.request.ctx, t0w,
+                                      time.perf_counter() - t0,
+                                      node=self._node, path="chunked",
+                                      tokens=c1 - c0)
             if c1 < len(prompt):
                 return True
             nxt = self._sampler(logits, self._split_key())
@@ -624,7 +667,7 @@ class ServeEngine:
             p.request.future.set_exception(exc)
             return True
         self._pending = None
-        self._activate(p.request, p.slot, first)
+        self._activate(p.request, p.slot, first, path="chunked")
         return True
 
     def _split_key(self):
@@ -673,6 +716,7 @@ class ServeEngine:
             if score > best:
                 best, k_eff = score, k
             k = min(k * 2, self._sync) if k < self._sync else k * 2
+        t0w = time.time()
         t0 = time.perf_counter()
         row_of = None
         if self._compact:
@@ -708,7 +752,16 @@ class ServeEngine:
         if self._key is not None:
             self._key = key
         toks = np.asarray(toks)           # ONE host sync per K-token window
-        us_tok = (time.perf_counter() - t0) * 1e6 / (len(active) * k_eff)
+        win_dur = time.perf_counter() - t0
+        us_tok = win_dur * 1e6 / (len(active) * k_eff)
+        # Each sampled in-flight request gets this window as a span — the
+        # loop is a no-op (ctx is None) unless a trace is actually live.
+        for i in active:
+            rq = self._slots[i].request
+            if rq.ctx is not None:
+                telemetry.record_span("decode", rq.ctx, t0w, win_dur,
+                                      node=self._node, k=k_eff,
+                                      active=len(active))
         with self._lock:
             c = self._counters
             c["steps"] += k_eff

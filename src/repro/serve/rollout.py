@@ -46,7 +46,7 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Optional, Sequence
 
-from repro.core import courier
+from repro.core import courier, telemetry
 
 
 def _vkey(version: Any) -> Optional[str]:
@@ -168,6 +168,8 @@ class RolloutController:
         except BaseException:  # noqa: BLE001 - unreachable endpoint
             return "dead"
         self._registry.set_draining(name, True)
+        telemetry.record_event("drain", cause=f"rollout to v{target}",
+                               replica=name)
         print(f"rollout: draining {name}", flush=True)
         state = self._wait_drained(name, client)
         if state == "dead":
@@ -194,6 +196,8 @@ class RolloutController:
                 or _vkey(health.get("version")) != _vkey(target)):
             return "dead" if self._probe_dead(name, client) else "unhealthy"
         self._undrain(name)
+        telemetry.record_event("swap", cause=f"now serving v{target}",
+                               replica=name)
         print(f"rollout: {name} now serving v{target}", flush=True)
         return "swapped"
 
@@ -282,6 +286,8 @@ class RolloutController:
         heartbeat may not have carried the new version yet (the table
         lags one beat period)."""
         self._set_canary(None, 0.0)
+        telemetry.record_event("rollback", cause=f"re-pinning fleet to v{old}",
+                               target=str(target))
         outcomes: dict[str, str] = {}
         for name, info in sorted(self._table().items()):
             if (_vkey(info.get("version")) != _vkey(target)

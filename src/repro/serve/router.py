@@ -85,7 +85,7 @@ import time
 from concurrent import futures as cf
 from typing import Any, Callable, Optional
 
-from repro.core import courier
+from repro.core import courier, telemetry
 from repro.core.courier.serialization import RemoteError
 from repro.core.nodes.base import get_current_context
 
@@ -202,6 +202,7 @@ class Router:
         self._client_factory = client_factory or courier.client_for
 
         self._lock = threading.Lock()
+        self._node = telemetry.node_name()
         self._replicas: dict[str, _Replica] = {}
         self._draining: list[_Replica] = []
         self._generation = -1
@@ -328,6 +329,9 @@ class Router:
         self._close_client(rep)
         if superseded:
             return
+        telemetry.record_event("replica_dropped",
+                               cause="dispatch observed a replica error",
+                               node=self._node, replica=rep.name)
         try:
             self._registry.report_failure(rep.name)
         except Exception:  # noqa: BLE001 - registry down: TTL will evict
@@ -384,6 +388,9 @@ class Router:
                           if r.inflight < r.budget(self._queue_slack)]
             if not admissible:
                 self._counters["overloaded"] += 1
+                telemetry.record_event(
+                    "overloaded", cause="all replicas at admission budget",
+                    node=self._node, replicas=len(candidates))
                 raise Overloaded(
                     f"all {len(candidates)} replicas at admission budget "
                     f"(in-flight {[r.inflight for r in candidates]})")
@@ -422,10 +429,25 @@ class Router:
                  kwargs: dict) -> cf.Future:
         """Park one call for the dispatcher; returns the caller's future.
         The dispatcher packs every call bound for the same replica that is
-        pending at drain time into one ``batch_call`` frame."""
+        pending at drain time into one ``batch_call`` frame.
+
+        Trace propagation happens HERE, on the caller's handler thread —
+        the dispatcher thread has no request context. The envelope's
+        context is parented under a pre-minted ``dispatch`` span id, so
+        engine-side spans nest under the dispatch that carried them; the
+        span itself is recorded when the frame COMPLETES, covering
+        send -> results-back (the replica-side spans nest inside it;
+        the serialize+send share rides along as ``send_us``)."""
         fut: cf.Future = cf.Future()
+        ctx = telemetry.current_context()
+        sid = None
+        if ctx is not None and ctx.sampled:
+            sid = telemetry.new_span_id()
+            kwargs = dict(kwargs)
+            kwargs[telemetry.TRACE_KEY] = ctx.child(sid).to_wire()
         with self._pending_cv:
-            self._pending_calls.append((rep, (method, args, kwargs), fut))
+            self._pending_calls.append(
+                (rep, (method, args, kwargs), fut, ctx, sid))
             self._pending_cv.notify()
         return fut
 
@@ -445,28 +467,43 @@ class Router:
             # Anything that arrived while the previous frames were being
             # serialized/sent leaves in the NEXT drain — that lag is the
             # whole coalescing window, so an idle router adds no latency.
-            groups: dict[int, tuple[_Replica, list, list]] = {}
-            for rep, call, fut in items:
+            groups: dict[int, tuple[_Replica, list, list, list]] = {}
+            for rep, call, fut, ctx, sid in items:
                 key = id(rep)
                 if key not in groups:
-                    groups[key] = (rep, [], [])
+                    groups[key] = (rep, [], [], [])
                 groups[key][1].append(call)
                 groups[key][2].append(fut)
-            for rep, calls, futs in groups.values():
-                self._send_frame(rep, calls, futs)
+                groups[key][3].append((ctx, sid))
+            for rep, calls, futs, traces in groups.values():
+                self._send_frame(rep, calls, futs, traces)
             if stopping:
                 return
 
-    def _send_frame(self, rep: _Replica, calls: list, futs: list) -> None:
+    def _send_frame(self, rep: _Replica, calls: list, futs: list,
+                    traces: Optional[list] = None) -> None:
+        t0w = time.time()
         t0 = time.perf_counter()
         try:
             frame = rep.client.futures.batch_call(calls)
         except BaseException as exc:  # noqa: BLE001 - transport refused
+            if traces:
+                dur = time.perf_counter() - t0
+                for ctx, sid in traces:
+                    if sid is not None:
+                        telemetry.record_span(
+                            "dispatch", ctx, t0w, dur, span_id=sid,
+                            node=self._node, replica=rep.name,
+                            frame_calls=len(calls), error=repr(exc))
             for fut in futs:
                 if not fut.set_running_or_notify_cancel():
                     continue
                 fut.set_exception(exc)
             return
+        # Counter accounting stays SEND cost (the router-added overhead
+        # number the bench reports); the dispatch SPAN below covers the
+        # full send -> results-back window so the trace timeline has no
+        # hole while the frame is in flight on the replica.
         us = (time.perf_counter() - t0) * 1e6
         with self._lock:
             self._counters["frames"] += 1
@@ -476,6 +513,14 @@ class Router:
                 self._counters["coalesced_calls"] += len(calls)
 
         def _fan(f: cf.Future) -> None:
+            if traces:
+                dur = time.perf_counter() - t0
+                for ctx, sid in traces:
+                    if sid is not None:
+                        telemetry.record_span(
+                            "dispatch", ctx, t0w, dur, span_id=sid,
+                            node=self._node, replica=rep.name,
+                            frame_calls=len(calls), send_us=us)
             try:
                 results = f.result()
             except BaseException as exc:  # noqa: BLE001 - frame died whole
@@ -505,9 +550,17 @@ class Router:
         attempts = 0
         failed_over = False
         last_exc: Optional[BaseException] = None
+        # Trace context rides in on this RPC handler thread (activated by
+        # the courier server); queue/dispatch spans are recorded per
+        # attempt so a failover's extra hops stay visible in the timeline.
+        tctx = telemetry.current_context()
+        tracing = tctx is not None and tctx.sampled
+        pick_t0w = pick_t0 = None
         while attempts <= self._max_retries:
             # Dispatch accounting starts per attempt: waits (startup
             # grace, a timed-out prior attempt) are not dispatch cost.
+            if pick_t0 is None:
+                pick_t0w, pick_t0 = time.time(), time.perf_counter()
             t0 = time.perf_counter()
             rep = self._pick(tried)
             if rep is None:
@@ -530,6 +583,14 @@ class Router:
                 self._refresh()
                 continue
             attempts += 1
+            if tracing:
+                # The queue/pick wait — including any waiting-for-replicas
+                # iterations since the last dispatch attempt.
+                telemetry.record_span(
+                    "queue", tctx, pick_t0w,
+                    time.perf_counter() - pick_t0, node=self._node,
+                    replica=rep.name, attempt=attempts)
+            pick_t0w = pick_t0 = None
             kwargs = {} if max_new is None else {"max_new": max_new}
             if self._coalesce:
                 # Enqueue-only: the dispatcher thread owns the transport
@@ -538,9 +599,22 @@ class Router:
                 # failover classification below.
                 fut = self._enqueue(rep, "generate", (prompt,), kwargs)
             else:
+                sid = None
+                if tracing:
+                    sid = telemetry.new_span_id()
+                    kwargs = dict(kwargs)
+                    kwargs[telemetry.TRACE_KEY] = \
+                        tctx.child(sid).to_wire()
+                d0w = time.time()
                 try:
                     fut = rep.client.futures.generate(prompt, **kwargs)
                 except BaseException as exc:  # noqa: BLE001 - dispatch failed
+                    if sid is not None:
+                        telemetry.record_span(
+                            "dispatch", tctx, d0w,
+                            time.perf_counter() - t0, span_id=sid,
+                            node=self._node, replica=rep.name,
+                            frame_calls=1, error=repr(exc))
                     self._release(rep)
                     last_exc = exc
                     tried.add(rep.name)
@@ -551,6 +625,20 @@ class Router:
                         self._counters["failovers"] += 1
                         self._version_row(rep.version)["errors"] += 1
                     continue
+                if sid is not None:
+                    # Span recorded at frame completion (send ->
+                    # results-back), same window as the coalesced path;
+                    # counters below keep the send-cost-only number.
+                    send_us = (time.perf_counter() - t0) * 1e6
+
+                    def _rec(f, _sid=sid, _d0w=d0w, _t0=t0, _rep=rep,
+                             _send_us=send_us):
+                        telemetry.record_span(
+                            "dispatch", tctx, _d0w,
+                            time.perf_counter() - _t0, span_id=_sid,
+                            node=self._node, replica=_rep.name,
+                            frame_calls=1, send_us=_send_us)
+                    fut.add_done_callback(_rec)
                 with self._lock:
                     self._counters["dispatches"] += 1
                     self._counters["frames"] += 1
@@ -594,6 +682,7 @@ class Router:
                     self._version_row(rep.version)["errors"] += 1
                 continue
             self._release(rep)
+            r0w, r0 = time.time(), time.perf_counter()
             # Generated-token count, when the reply looks like a sequence
             # ([S + n_generated] vs the [S] prompt) — powers the
             # per-version us/token comparison the canary verdict reads.
@@ -601,6 +690,13 @@ class Router:
                 gen_tokens = max(len(out) - len(prompt), 1)
             except TypeError:
                 gen_tokens = 1
+            if tracing:
+                # Router-side reply handling (fan-out + accounting); the
+                # serialization half is recorded server-side on the
+                # replica for non-inproc transports.
+                telemetry.record_span("reply", tctx, r0w,
+                                      time.perf_counter() - r0,
+                                      node=self._node, replica=rep.name)
             with self._lock:
                 self._counters["completed"] += 1
                 row = self._version_row(rep.version)
@@ -666,6 +762,25 @@ class Router:
                                                             or 1)
         s["mean_calls_per_frame"] = s["dispatches"] / (s["frames"] or 1)
         return s
+
+    def telemetry(self) -> dict:
+        """Standard telemetry scrape: process metrics + drained spans and
+        events, with the router's own ``stats()`` and each replica
+        client's transport wire counters as the service payload."""
+        transports: dict[str, dict] = {}
+        with self._lock:
+            reps = [(name, r.client) for name, r in self._replicas.items()]
+        for name, client in reps:
+            tr = getattr(client, "transport", None)
+            stats = getattr(tr, "stats", None)
+            if callable(stats):
+                try:
+                    transports[name] = stats()
+                except Exception:  # noqa: BLE001 - closing transport
+                    pass
+        service = self.stats()
+        service["transports"] = transports
+        return telemetry.telemetry_snapshot(service=service)
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:

@@ -48,7 +48,6 @@ import dataclasses
 import itertools
 import threading
 import time
-import traceback
 from typing import Any, Callable, Optional
 
 import jax
@@ -56,7 +55,7 @@ import numpy as np
 
 from repro.ckpt.checkpoint import ModelStore
 from repro.ckpt.elastic import restore_elastic
-from repro.core import courier
+from repro.core import courier, telemetry
 from repro.core.discovery import Heartbeater
 from repro.core.fault import (FaultEvent, FaultInjector, RestartPolicy,
                               hedged_map)
@@ -265,6 +264,10 @@ class LearnerWorker:
                 "version": self._published, "loss": self._loss,
                 "steps_per_s": round(self._steps_per_s, 3),
                 "done": self._done}
+
+    def telemetry(self) -> dict:
+        """Standard hub scrape: process metrics/spans + this worker's load."""
+        return telemetry.telemetry_snapshot(service=self.load())
 
     def get_status(self) -> dict:
         if self._dead:
@@ -478,6 +481,9 @@ class ActorWorker:
                 "inserts": self._inserts, "stalls": self._stalls,
                 "inserts_per_s": round(self._inserts_per_s, 3)}
 
+    def telemetry(self) -> dict:
+        return telemetry.telemetry_snapshot(service=self.load())
+
     def get_status(self) -> dict:
         if self._dead:
             raise ConnectionError(f"{self._name} is dead")
@@ -566,6 +572,9 @@ class ReplayService(ReplayServer):
                 totals[k] += s[k]
         return {"role": "replay", **totals}
 
+    def telemetry(self) -> dict:
+        return telemetry.telemetry_snapshot(service=self.load())
+
 
 class TrainSupervisor:
     """Membership-level resurrection for the training fleet.
@@ -598,13 +607,20 @@ class TrainSupervisor:
         self._fatal: set[str] = set()
         self._hold_until: dict[str, float] = {}   # spawn in flight: wait
         self._pending: dict[str, float] = {}      # backoff: respawn at t
+        self._logger = telemetry.get_logger()
         self.events: list[dict] = []
         self.done = False
 
     def _log(self, kind: str, name: str, **extra) -> None:
         self.events.append({"kind": kind, "name": name, **extra})
-        detail = " ".join(f"{k}={v}" for k, v in extra.items())
-        print(f"supervisor: {kind} {name} {detail}".rstrip(), flush=True)
+        self._logger.info(f"{kind} {name}", **extra)
+        if kind in ("respawn", "fatal", "backoff", "spawn-failed",
+                    "retire", "scale"):
+            # Fabric events with causes: the hub collects these, so a
+            # respawn storm is queryable after the fact, not just
+            # scrolled-away stdout.
+            telemetry.record_event(kind, cause=name,
+                                   node=self._logger.node, **extra)
 
     def expected_names(self) -> list[str]:
         return [f"{role}-{i}" for role, n in sorted(self._expected.items())
@@ -752,10 +768,11 @@ class ThreadWorkerSpawner:
 
         def _main():
             set_current_context(ctx)
+            log = telemetry.get_logger(name)
             try:
                 worker = factory(name, endpoint)
             except Exception:  # noqa: BLE001 - supervisor retries the spawn
-                traceback.print_exc()
+                log.exception("worker factory failed")
                 return
             courier.inprocess.register(inproc, worker)
             try:
@@ -766,7 +783,10 @@ class ThreadWorkerSpawner:
                     # Passive services (e.g. replay) serve until stopped.
                     ctx.stop_event.wait()
             except Exception:  # noqa: BLE001 - a worker crash is a *fault*:
-                traceback.print_exc()   # the supervisor resurrects it
+                # the supervisor resurrects it; the node-prefixed log (and
+                # the recorded fabric event) make the respawn attributable
+                # in interleaved fleet output.
+                log.exception("worker crashed")
             finally:
                 courier.inprocess.unregister(inproc)
 

@@ -229,6 +229,63 @@ def test_client_context_manager_and_server_double_stop():
     never_started.stop()  # stop before start is safe too
 
 
+# ---- telemetry: transport I/O counters ---------------------------------------
+
+def test_transport_stats_counters(client):
+    """Every transport exposes cumulative wire counters through
+    ``stats()`` — the payload a node's ``telemetry()`` RPC surfaces."""
+    tr = client.transport
+    base = tr.stats()
+    for key in ("calls", "batch_calls", "batched_calls_in_frames",
+                "errors", "bytes_out", "bytes_in", "serialize_us",
+                "pool_grows"):
+        assert key in base
+    client.add(1, b=2)
+    arr = np.arange(4096, dtype=np.float32)
+    np.testing.assert_array_equal(client.echo(arr), arr)
+    client.batch_call([("add", (i,), {}) for i in range(3)])
+    s = tr.stats()
+    if isinstance(tr, courier.InProcTransport):
+        # Inproc batch entries route through call(): 2 singles + 3 batched.
+        assert s["calls"] - base["calls"] == 5
+    else:
+        assert s["calls"] - base["calls"] == 2        # add + echo
+    assert s["batch_calls"] - base["batch_calls"] == 1
+    assert (s["batched_calls_in_frames"]
+            - base["batched_calls_in_frames"]) == 3
+    if isinstance(tr, courier.InProcTransport):
+        # No wire: byte counters stay zero, but app errors still count.
+        assert s["bytes_out"] == 0 and s["bytes_in"] == 0
+        with pytest.raises(ValueError, match="intentional"):
+            client.boom()
+        assert tr.stats()["errors"] - base["errors"] >= 1
+    else:
+        # The 16 KiB echo array dominates both directions.
+        assert s["bytes_out"] - base["bytes_out"] > 4096 * 4
+        assert s["bytes_in"] - base["bytes_in"] > 4096 * 4
+        assert s["serialize_us"] > base["serialize_us"]
+
+
+def test_shm_transport_stats_count_pool_grows():
+    """A message larger than the ring's largest preallocated slot forces
+    a slot-pool grow; the transport's stats surface the event."""
+    import os
+    import time
+    name = f"tg{os.getpid():x}{time.monotonic_ns() & 0xffffff:x}"
+    srv = CourierServer(Service(), shm_name=name)
+    srv.start()
+    cli = courier.client_for(f"shm://{name}+{srv.endpoint}")
+    try:
+        assert isinstance(cli.transport, courier.ShmTransport)
+        big = np.zeros(64 << 20, np.uint8)       # 64 MiB: beyond any slot
+        out = cli.echo(big)
+        assert out.nbytes == big.nbytes
+        assert cli.transport.stats()["pool_grows"] >= 1
+    finally:
+        cli.close()
+        srv.stop()
+
+
 def test_map_handles_preserves_namedtuple():
     out = handles.map_handles(Point([1, 2], {"k": (3,)}), lambda h: h)
     assert type(out).__name__ == "Point"
